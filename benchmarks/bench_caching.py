@@ -1,0 +1,86 @@
+"""Paper Fig. 9: expectation-value caching speedup.
+
+<psi|H|psi> for the TFI Hamiltonian (one-site terms on all sites + two-site
+terms on all neighbour pairs, as in the paper) with and without the
+row-environment cache.  Timed EAGERLY (library-primitive granularity, like
+the paper's NumPy/CTF backends): under one big jit, XLA's CSE would
+silently deduplicate the per-term environment recomputations and hand the
+no-cache path the cached structure for free.  The no-cache cost is measured
+on a term subset and scaled (noted in `derived`).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import SCALE, emit, emit_info
+from repro.core import bmps as B
+from repro.core.environments import row_environments, top_environments, \
+    trivial_env, _flip_rows
+from repro.core.expectation import _term_value, norm_from_envs, term_rows
+from repro.core.observable import Observable, tfi_hamiltonian
+from repro.core.peps import random_peps
+from repro.core.einsumsvd import DirectSVD
+
+
+def _eval_cached(st, obs, opt):
+    top, bottom = row_environments(st, opt)
+    norm = norm_from_envs(st, top, bottom)
+    total = 0.0
+    for term in obs:
+        i0, i1 = term_rows(term, st.ncol)
+        total = total + term.coeff * _term_value(st, term, top[i0], bottom[i1])
+    return total / norm
+
+
+def _eval_term_nocache(st, term, opt, key):
+    i0, i1 = term_rows(term, st.ncol)
+    k1, k2 = jax.random.split(key)
+    top_env = (trivial_env(st.ncol, st.dtype) if i0 == 0 else
+               top_environments(st.sites[:i0], st.sites[:i0], opt, k1)[i0])
+    if i1 == st.nrow - 1:
+        bot_env = trivial_env(st.ncol, st.dtype)
+    else:
+        sub = st.sites[i1 + 1:]
+        bot_env = top_environments(_flip_rows(sub), _flip_rows(sub), opt,
+                                   k2)[len(sub)]
+    return _term_value(st, term, top_env, bot_env)
+
+
+def main():
+    grids = (4, 5) if SCALE == "small" else (4, 6, 8, 12)
+    bond = 3
+    subset = 12
+    for n in grids:
+        st = random_peps(n, n, bond, jax.random.PRNGKey(0))
+        obs = tfi_hamiltonian(n, n)
+        opt = B.BMPS(bond * bond, DirectSVD())
+
+        # warm the per-shape eager compile caches for both paths
+        jax.block_until_ready(_eval_cached(st, obs, opt))
+        key = jax.random.PRNGKey(3)
+        for term in obs.terms[:subset]:
+            key, sub = jax.random.split(key)
+            jax.block_until_ready(_eval_term_nocache(st, term, opt, sub))
+
+        t0 = time.perf_counter()
+        jax.block_until_ready(_eval_cached(st, obs, opt))
+        t_cache = time.perf_counter() - t0
+
+        key = jax.random.PRNGKey(3)
+        t0 = time.perf_counter()
+        for term in obs.terms[:subset]:
+            key, sub = jax.random.split(key)
+            jax.block_until_ready(_eval_term_nocache(st, term, opt, sub))
+        t_sub = time.perf_counter() - t0
+        t_nocache = t_sub * len(obs) / min(subset, len(obs))
+
+        emit(f"caching/{n}x{n}/cached", t_cache, f"bond={bond};terms={len(obs)}")
+        emit(f"caching/{n}x{n}/nocache", t_nocache,
+             f"extrapolated_from={min(subset, len(obs))}_terms")
+        emit_info(f"caching/{n}x{n}/speedup", f"{t_nocache/t_cache:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

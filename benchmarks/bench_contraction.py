@@ -1,0 +1,52 @@
+"""Paper Fig. 8 / Table II: PEPS contraction time vs bond dimension.
+
+BMPS (direct SVD) vs IBMPS (implicit randomized SVD) on a PEPS without
+physical indices (generated directly, as the paper does), plus two-layer
+IBMPS on the <psi|psi> network and the exact contraction for small bonds.
+Also fits the time~r^alpha scaling exponents to show the asymptotic gap.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import SCALE, emit, emit_info, timeit
+from repro.core import bmps as B
+from repro.core.peps import random_onelayer, random_peps
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+
+
+def main():
+    grid = 6 if SCALE == "small" else 8
+    bonds = (2, 4, 8) if SCALE == "small" else (2, 4, 8, 16, 32)
+    times = {"bmps": [], "ibmps": []}
+    for r in bonds:
+        rows = random_onelayer(grid, grid, r, jax.random.PRNGKey(0))
+        chi = r  # contraction bond = initial bond (paper Fig. 8 setup)
+        for name, svd in (("bmps", DirectSVD()),
+                          ("ibmps", RandomizedSVD(niter=2, oversample=4))):
+            fn = jax.jit(lambda rw, o=B.BMPS(chi, svd): B.contract_onelayer(rw, o))
+            t = timeit(fn, rows, repeats=2)
+            times[name].append((r, t))
+            emit(f"contraction/{grid}x{grid}/r{r}/{name}", t, f"chi={chi}")
+        if r <= 4:
+            t = timeit(jax.jit(B.contract_exact_onelayer), rows, repeats=2)
+            emit(f"contraction/{grid}x{grid}/r{r}/exact", t, "")
+        # two-layer IBMPS on <psi|psi> (phys PEPS of bond sqrt-ish scale)
+        if r <= 8:
+            st = random_peps(grid, grid, r, jax.random.PRNGKey(1))
+            fn = jax.jit(lambda s, o=B.BMPS(chi, RandomizedSVD(niter=2, oversample=4)):
+                         B.contract_twolayer(s.sites, s.sites, o))
+            t = timeit(fn, st, repeats=2)
+            emit(f"contraction/{grid}x{grid}/r{r}/two-layer-ibmps", t, f"chi={chi}")
+    # scaling exponents (log-log slope over the last two points)
+    for name, ts in times.items():
+        if len(ts) >= 2:
+            (r0, t0), (r1, t1) = ts[-2], ts[-1]
+            alpha = math.log(t1 / t0) / math.log(r1 / r0)
+            emit_info(f"contraction/scaling/{name}", f"alpha={alpha:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Fig. 13: imaginary time evolution of the J1-J2 Heisenberg model.
+
+Energy after ITE vs evolution bond dimension r, against the statevector-ITE
+reference (the paper's baseline), including the m=r vs m=r^2 contraction
+bond comparison of Fig. 13b.  Grid is 3x3 at small scale (CPU) and the
+paper's 4x4 at REPRO_BENCH_SCALE=paper.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, emit_info
+from repro.core import bmps as B
+from repro.core.ite import ite_run, ite_statevector
+from repro.core.observable import j1j2_hamiltonian
+from repro.core.peps import QRUpdate, computational_zeros
+from repro.core.einsumsvd import RandomizedSVD
+
+
+def main():
+    n = 3 if SCALE == "small" else 4
+    steps = 60 if SCALE == "small" else 150
+    tau = 0.05
+    obs = j1j2_hamiltonian(n, n)
+    _, e_ref = ite_statevector(n, n, obs, tau, steps=max(steps * 2, 200))
+    emit_info(f"ite/{n}x{n}/statevector", f"energy={e_ref:.6f}")
+    bonds = (1, 2, 3) if SCALE == "small" else (1, 2, 3, 4)
+    for r in bonds:
+        for m_name, m in (("m=r", max(r, 2)), ("m=r^2", max(r * r, 2))):
+            res = ite_run(computational_zeros(n, n), obs, tau, steps,
+                          update=QRUpdate(rank=r),
+                          contract=B.BMPS(m, RandomizedSVD(niter=2, oversample=4)),
+                          measure_every=steps)
+            err = abs(res.energies[-1] - e_ref) / abs(e_ref)
+            emit_info(f"ite/{n}x{n}/r{r}/{m_name}",
+                      f"energy={res.energies[-1]:.6f};relerr={err:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run sweep (paper Fig. 11/12 analogue).
+
+The container is CPU-only, so instead of wall-clock scaling curves the
+scaling story is told by the compiled-artifact roofline terms per
+(arch x shape x mesh) — reads results/dryrun.json produced by
+``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import RESULTS_DIR, emit_info
+
+
+def main():
+    path = RESULTS_DIR / "dryrun.json"
+    if not path.exists():
+        emit_info("roofline/missing", f"run dryrun --all first ({path})")
+        return
+    rows = json.loads(path.read_text())
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+    emit_info("roofline/cells", f"ok={len(ok)};skipped={len(skipped)};"
+                                f"errors={len(errors)}")
+    for r in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        emit_info(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            f"bottleneck={r['bottleneck']};"
+            f"compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"collective_ms={r['collective_s']*1e3:.2f};"
+            f"frac={r.get('roofline_frac', 0):.4f};"
+            f"useful={r.get('useful_ratio', 0):.3f}")
+    for r in skipped:
+        emit_info(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                  f"SKIPPED:{r.get('reason','')[:60]}")
+    for r in errors:
+        emit_info(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                  f"ERROR:{r.get('error','')[:80]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 10: RQC contraction relative error vs contraction bond dim.
+
+A 4x4 PEPS is evolved EXACTLY through 8 RQC layers (initial bond 16, as in
+the paper), then one amplitude is contracted with BMPS and IBMPS at varying
+chi and compared against the exact statevector amplitude.  The headline
+claim — implicit randomized SVD adds no error over direct SVD, and the
+error drops to machine epsilon above a chi threshold — is measured here.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import SCALE, emit_info
+from repro.core import bmps as B
+from repro.core import statevector as sv
+from repro.core.circuits import (apply_circuit_exact_peps,
+                                 apply_circuit_statevector, random_circuit)
+from repro.core.peps import computational_zeros
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+
+
+def main():
+    n = 4
+    circ = random_circuit(n, n, 8, seed=3)
+    state = apply_circuit_exact_peps(computational_zeros(n, n), circ)
+    vec = apply_circuit_statevector(sv.zeros(n * n), circ)
+    bits = np.zeros((n, n), dtype=int)
+    exact = complex(vec[(0,) * (n * n)])
+    emit_info(f"rqc/{n}x{n}", f"bond={state.max_bond()};|amp|={abs(exact):.3e}")
+    chis = (2, 4, 8, 16, 32, 64) if SCALE == "small" else (2, 4, 8, 16, 32, 64, 128)
+    for chi in chis:
+        a_b = complex(B.amplitude(state, bits, B.BMPS(chi, DirectSVD())))
+        a_i = complex(B.amplitude(state, bits,
+                                  B.BMPS(chi, RandomizedSVD(niter=4, oversample=8))))
+        e_b = abs(a_b - exact) / abs(exact)
+        e_i = abs(a_i - exact) / abs(exact)
+        emit_info(f"rqc/{n}x{n}/chi{chi}",
+                  f"bmps_relerr={e_b:.3e};ibmps_relerr={e_i:.3e}")
+
+
+if __name__ == "__main__":
+    main()

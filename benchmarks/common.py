@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing, CSV emission, result collection."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results"))
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")  # small | paper
+
+_ROWS: List[Dict] = []
+
+
+def block(x):
+    import jax
+    return jax.block_until_ready(x)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        block(fn(*args, **kw))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        block(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """Print the assignment-mandated CSV row: name,us_per_call,derived."""
+    us = seconds * 1e6
+    print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": us, "derived": derived})
+
+
+def emit_info(name: str, derived: str):
+    print(f"{name},,{derived}")
+    _ROWS.append({"name": name, "us_per_call": None, "derived": derived})
+
+
+def save_rows(fname: str):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / fname
+    path.write_text(json.dumps(_ROWS, indent=1))
+    return path

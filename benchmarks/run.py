@@ -1,0 +1,58 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--only evolution,rqc,...]
+
+Figures covered (see DESIGN.md §7):
+  Fig. 7  evolution      Fig. 8  contraction     Fig. 9  caching
+  Fig. 10 rqc accuracy   Fig. 13 ite             Fig. 14 vqe
+  Fig. 11/12 -> roofline table from the dry-run sweep
+Scale with REPRO_BENCH_SCALE=small|paper (default small: CPU-sized).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_caching, bench_contraction, bench_evolution,
+                        bench_ite, bench_roofline, bench_rqc, bench_vqe)
+from benchmarks.common import emit_info, save_rows
+
+SUITES = {
+    "evolution": bench_evolution.main,      # Fig. 7
+    "contraction": bench_contraction.main,  # Fig. 8 / Table II
+    "caching": bench_caching.main,          # Fig. 9
+    "rqc": bench_rqc.main,                  # Fig. 10
+    "ite": bench_ite.main,                  # Fig. 13
+    "vqe": bench_vqe.main,                  # Fig. 14
+    "roofline": bench_roofline.main,        # Fig. 11/12 analogue
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+            emit_info(f"{name}/FAILED", f"{type(e).__name__}: {e}")
+        emit_info(f"{name}/elapsed", f"{time.time()-t0:.1f}s")
+    out = save_rows("benchmarks.json")
+    print(f"# results saved to {out}", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end driver 4: train a ~100M-param LM for a few hundred steps on
+the synthetic pipeline, with checkpointing and auto-resume.
+
+This wraps launch/train.py with a near-100M dense config (a smollm-family
+model) sized for CPU execution.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: 12L x 768d x 12H, vocab 32k — GPT-2-small-ish, in the
+    # smollm (llama) family; full fidelity training loop, CPU-sized batch.
+    import repro.configs as configs
+    from repro.models.common import Config
+    import jax.numpy as jnp
+
+    cfg = Config(name="demo-100m", family="dense", n_layers=12, d_model=768,
+                 n_heads=12, n_kv_heads=12, d_head=64, d_ff=2048, vocab=32000,
+                 param_dtype=jnp.float32, act_dtype=jnp.float32, remat=False)
+    # register it so launch/train.py can find it
+    configs._MODULES["demo-100m"] = None
+    configs.get = (lambda orig: (lambda name: cfg if name == "demo-100m"
+                                 else orig(name)))(configs.get)
+
+    train_mod.main([
+        "--arch", "demo-100m", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128", "--lr", "3e-4",
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--checkpoint-every", "100",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Core PEPS library — the paper's contribution (Koala) in JAX.
+
+Importing this package enables float64/complex128 support, which quantum
+tensor-network arithmetic needs for meaningful accuracy studies. LM-substrate
+modules (repro.models, repro.launch) use explicit dtypes and are unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.peps import PEPS, computational_zeros, random_peps  # noqa: E402,F401
+from repro.core.gates import GATES, gate, two_site_gate  # noqa: E402,F401
+from repro.core.observable import Observable  # noqa: E402,F401
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD, einsumsvd  # noqa: E402,F401

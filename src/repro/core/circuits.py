@@ -1,0 +1,114 @@
+"""Quantum circuit generators: random quantum circuits (RQC) and VQE ansatze.
+
+A circuit is a list of ``(gate_ndarray, [flat_site, ...])`` moments applied
+in order.  RQC construction follows the paper's Section VI-B protocol
+(after Arute et al. 2019): random single-qubit gates from
+{sqrt(X), sqrt(Y), sqrt(W)} every layer, and iSWAP on all neighbouring pairs
+every four layers — each iSWAP round multiplies the bond dimension by 4,
+so 8 layers yield bond dimension 16 under exact evolution.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import gates as G
+
+Circuit = List[Tuple[np.ndarray, List[int]]]
+
+
+def _neighbor_pairs(nrow: int, ncol: int) -> List[Tuple[int, int]]:
+    pairs = []
+    for i in range(nrow):
+        for j in range(ncol):
+            s = i * ncol + j
+            if j + 1 < ncol:
+                pairs.append((s, s + 1))
+            if i + 1 < nrow:
+                pairs.append((s, s + ncol))
+    return pairs
+
+
+def random_circuit(nrow: int, ncol: int, n_layers: int, seed: int = 0,
+                   iswap_every: int = 4) -> Circuit:
+    """Paper's RQC: per layer a random sqrt-gate on every site; every
+    ``iswap_every`` layers, iSWAP on all neighbouring pairs."""
+    rng = np.random.default_rng(seed)
+    singles = [G.SQRT_X, G.SQRT_Y, G.SQRT_W]
+    circuit: Circuit = []
+    n = nrow * ncol
+    last = -np.ones(n, dtype=int)
+    for layer in range(n_layers):
+        for s in range(n):
+            choices = [k for k in range(3) if k != last[s]]
+            k = int(rng.choice(choices))
+            last[s] = k
+            circuit.append((singles[k], [s]))
+        if (layer + 1) % iswap_every == 0:
+            for pair in _neighbor_pairs(nrow, ncol):
+                circuit.append((G.ISWAP, list(pair)))
+    return circuit
+
+
+def vqe_ansatz(nrow: int, ncol: int, thetas: Sequence[float]) -> Circuit:
+    """Paper Section VI-D2 ansatz: repeated layers of Ry(theta) on every
+    qubit followed by CNOT on all nearest-neighbour pairs.
+
+    ``thetas`` has length n_layers * nrow * ncol."""
+    n = nrow * ncol
+    assert len(thetas) % n == 0, "thetas must be a multiple of the qubit count"
+    n_layers = len(thetas) // n
+    circuit: Circuit = []
+    idx = 0
+    for _ in range(n_layers):
+        for s in range(n):
+            circuit.append((G.RY(float(thetas[idx])), [s]))
+            idx += 1
+        for pair in _neighbor_pairs(nrow, ncol):
+            circuit.append((G.CX, list(pair)))
+    return circuit
+
+
+def apply_circuit_peps(state, circuit: Circuit, update, key=None):
+    """Run a circuit on a PEPS with the given two-site update option."""
+    import jax
+    from repro.core.peps import apply_operator
+    if key is None:
+        key = jax.random.PRNGKey(123)
+    for g, sites in circuit:
+        key, sub = jax.random.split(key)
+        state = apply_operator(state, g, sites, update, key=sub)
+    return state
+
+
+def apply_circuit_exact_peps(state, circuit: Circuit):
+    """Run a circuit on a PEPS with NO truncation (exact evolution).
+
+    Bond dimensions grow multiplicatively at every two-site gate; use only
+    for the small RQC accuracy studies (the paper does the same)."""
+    from repro.core.peps import apply_operator, DirectUpdate
+    for g, sites in circuit:
+        if len(sites) == 1:
+            state = apply_operator(state, g, sites)
+        else:
+            # rank bound = product of the current shared-bond dim and gate rank
+            i0, j0 = state.coords(sites[0])
+            i1, j1 = state.coords(sites[1])
+            if abs(i0 - i1) + abs(j0 - j1) != 1:
+                raise ValueError("exact evolution supports adjacent gates only")
+            t0 = state.sites[i0][j0]
+            # shared bond dim
+            if i0 == i1:
+                k = t0.shape[4] if j1 > j0 else t0.shape[2]
+            else:
+                k = t0.shape[3] if i1 > i0 else t0.shape[1]
+            state = apply_operator(state, g, sites, DirectUpdate(rank=4 * k))
+    return state
+
+
+def apply_circuit_statevector(vec, circuit: Circuit):
+    from repro.core import statevector as sv
+    for g, sites in circuit:
+        vec = sv.apply_gate(vec, g, sites)
+    return vec

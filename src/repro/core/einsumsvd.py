@@ -1,0 +1,114 @@
+"""The einsumsvd abstraction (paper Section II-C / IV-A).
+
+``einsumsvd`` contracts a tensor network into one tensor and refactorizes it
+into two tensors joined by a single truncated bond.  The *algorithm option*
+decides how:
+
+* :class:`DirectSVD` — materialize theta, matricize, LAPACK SVD (baseline).
+* :class:`RandomizedSVD` — implicit randomized SVD (Alg. 4): theta is never
+  formed; asymptotically cheaper and single-pass (IBMPS / two-layer IBMPS).
+
+All paths truncate to a *static* rank (jit-friendly); an optional relative
+``cutoff`` additionally zeroes trailing singular values (shape-preserving).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rsvd import ImplicitOperator, randomized_svd
+
+
+def _apply_cutoff(s: jnp.ndarray, cutoff: float) -> jnp.ndarray:
+    if cutoff <= 0.0:
+        return s
+    return jnp.where(s >= cutoff * s[0], s, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectSVD:
+    """Explicitly contract theta, then truncated LAPACK SVD."""
+    cutoff: float = 0.0
+
+    def __call__(self, op: ImplicitOperator, rank: int, key=None):
+        theta = op.dense()
+        m, n = op.row_size, op.col_size
+        rank = min(rank, m, n)
+        mat = theta.reshape(m, n)
+        u, s, vh = jnp.linalg.svd(mat, full_matrices=False)
+        u, s, vh = u[:, :rank], s[:rank], vh[:rank]
+        s = _apply_cutoff(s, self.cutoff)
+        return (
+            u.reshape(op.row_shape + (rank,)),
+            s,
+            vh.reshape((rank,) + op.col_shape),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomizedSVD:
+    """Implicit randomized SVD (paper Alg. 4).
+
+    ``gram_final`` replaces the paper's dense k x Ncol final SVD with a
+    Gram-QR + local k x k SVD (beyond-paper; see EXPERIMENTS.md SSPerf)."""
+    niter: int = 4
+    oversample: int = 8
+    cutoff: float = 0.0
+    gram_final: bool = True
+
+    def __call__(self, op: ImplicitOperator, rank: int, key=None):
+        u, s, v = randomized_svd(op, rank, self.niter, self.oversample, key,
+                                 gram_final=self.gram_final)
+        s = _apply_cutoff(s, self.cutoff)
+        return u, s, v
+
+
+def einsumsvd(
+    option,
+    tensors: Sequence[jnp.ndarray],
+    subscripts: Sequence[str],
+    row: str,
+    col: str,
+    rank: int,
+    absorb: str = "both",
+    key=None,
+) -> Tuple[jnp.ndarray, ...]:
+    """Contract the network and refactorize into (left, right) along a new bond.
+
+    Parameters
+    ----------
+    option:      DirectSVD() or RandomizedSVD(...).
+    tensors, subscripts: the network (einsum-style labels, one string/tensor).
+    row, col:    dangling labels that go to the left / right factor.
+    rank:        truncation bond dimension (static).
+    absorb:      'both' (sqrt(s) into each factor — simple update convention),
+                 'left', 'right', or 'none' (returns (u, s, v)).
+
+    Returns (left, right) — or (u, s, v) when absorb='none'.  The new bond is
+    the LAST axis of ``left`` and the FIRST axis of ``right``.
+    """
+    op = ImplicitOperator(tensors, subscripts, row, col)
+    u, s, v = option(op, rank, key)
+    if absorb == "none":
+        return u, s, v
+    if absorb == "both":
+        sq = jnp.sqrt(s)
+        return u * sq, sq[(slice(None),) + (None,) * (v.ndim - 1)] * v
+    if absorb == "left":
+        return u * s, v
+    if absorb == "right":
+        return u, s[(slice(None),) + (None,) * (v.ndim - 1)] * v
+    raise ValueError(f"bad absorb={absorb!r}")
+
+
+def truncation_error(op_dense: jnp.ndarray, u, s, v) -> jnp.ndarray:
+    """Frobenius-norm relative error of a refactorization (test utility)."""
+    rank = s.shape[0]
+    left = u.reshape(-1, rank)
+    right = v.reshape(rank, -1)
+    approx = (left * s) @ right
+    exact = op_dense.reshape(left.shape[0], right.shape[1])
+    return jnp.linalg.norm(approx - exact) / jnp.maximum(jnp.linalg.norm(exact), 1e-300)

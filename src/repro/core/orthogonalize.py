@@ -1,0 +1,101 @@
+"""Reshape-avoiding orthogonalization via Gram matrices (paper Alg. 5).
+
+On a distributed tensor, matricizing for QR forces a full data redistribution
+(Cyclops) / an all-to-all re-layout (GSPMD).  The paper instead forms the
+small Gram matrix ``G = A*A`` with a *contraction* over the big modes, which
+the backend executes as a GEMM with no reshape of the big operand, then
+eigendecomposes G locally and reconstitutes the isometry with one more GEMM.
+
+All functions are jit-safe (static shapes, `eigh` only on the small matrix).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+_EPS = {jnp.float32.dtype: 1e-6, jnp.float64.dtype: 1e-13,
+        jnp.complex64.dtype: 1e-6, jnp.complex128.dtype: 1e-13}
+
+
+def _eps_for(dtype) -> float:
+    return _EPS.get(jnp.dtype(dtype), 1e-6)
+
+
+def gram_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """QR-equivalent factorization A = Q @ R via the Gram trick (Alg. 5).
+
+    ``a`` is treated as an operator from its *last* ``n_small`` modes (the
+    small space) to its leading modes (the big space).  Returns:
+
+    * ``q`` with the same shape as ``a`` — isometric over the big modes
+      (on the row space of A),
+    * ``r`` of shape ``small + small`` such that ``a == q . r`` (contraction
+      over the last ``n_small`` modes of ``q`` with the first ``n_small`` of
+      ``r``).
+
+    No reshape touches the big modes: G = A*A is formed by a contraction, the
+    eigendecomposition happens on the small G only.
+    """
+    big_shape = a.shape[: a.ndim - n_small]
+    small_shape = a.shape[a.ndim - n_small:]
+    nbig = 1
+    for s in big_shape:
+        nbig *= s
+    nsmall = 1
+    for s in small_shape:
+        nsmall *= s
+
+    big_axes = tuple(range(a.ndim - n_small))
+    # G_{cc'} = sum_big conj(A)_{big,c} A_{big,c'} — contraction, no reshape of A.
+    g = jnp.tensordot(a.conj(), a, axes=(big_axes, big_axes))
+    g_mat = g.reshape(nsmall, nsmall)  # small, local
+    lam, x = jnp.linalg.eigh(g_mat)
+    eps = _eps_for(a.dtype) * jnp.maximum(jnp.max(jnp.abs(lam)), 1.0)
+    lam = jnp.maximum(lam.real, eps)
+    sqrt_lam = jnp.sqrt(lam)
+    r_mat = (sqrt_lam[:, None] * x.conj().T)           # R = sqrt(L) X^H
+    p_mat = x / sqrt_lam[None, :]                      # P = R^{-1} = X L^{-1/2}
+    p = p_mat.reshape(small_shape + small_shape)
+    # Q = A P (contraction over the small modes — big modes untouched).
+    small_axes = tuple(range(a.ndim - n_small, a.ndim))
+    q = jnp.tensordot(a, p, axes=(small_axes, tuple(range(n_small))))
+    r = r_mat.reshape(small_shape + small_shape)
+    return q, r
+
+
+def orthogonalize_cols(t: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormalize a sketch tensor over its last axis via the Gram trick.
+
+    ``t`` has shape ``(*dims, k)``; returns ``q`` of the same shape with
+    ``q^H q = I_k`` (over the leading modes).  This is the `orthogonalize`
+    inside randomized SVD (paper Alg. 4 lines 2/4/5).
+    """
+    q, _ = gram_qr(t, 1)
+    return q
+
+
+def reshape_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Baseline: matricize + LAPACK QR (the approach Alg. 5 avoids).
+
+    Same contract as :func:`gram_qr`; used for benchmarking the trade-off
+    (paper Fig. 7b) and in tests as a reference.
+    """
+    big_shape = a.shape[: a.ndim - n_small]
+    small_shape = a.shape[a.ndim - n_small:]
+    nbig = 1
+    for s in big_shape:
+        nbig *= s
+    nsmall = 1
+    for s in small_shape:
+        nsmall *= s
+    mat = a.reshape(nbig, nsmall)
+    q_mat, r_mat = jnp.linalg.qr(mat, mode="reduced")
+    k = q_mat.shape[1]
+    if k != nsmall:
+        # wide case (nbig < nsmall): zero-pad so the inner bond stays nsmall
+        q_mat = jnp.pad(q_mat, ((0, 0), (0, nsmall - k)))
+        r_mat = jnp.pad(r_mat, ((0, nsmall - k), (0, 0)))
+    q = q_mat.reshape(big_shape + small_shape)
+    r = r_mat.reshape(small_shape + small_shape)
+    return q, r

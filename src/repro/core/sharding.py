@@ -1,0 +1,146 @@
+"""Distributed PEPS: Cyclops-style tensor distribution on a JAX mesh.
+
+The paper distributes every big site tensor over all MPI processes; the JAX
+analogue shards each site tensor's bond axes over the ``model`` axis while an
+*ensemble* batch axis (independent PEPS evolutions — the VQE/ITE parameter
+sweeps of Section VI-D) shards over ``pod``+``data``.  Contractions across
+sharded bonds lower to GSPMD collectives; the Gram orthogonalization keeps
+factorizations local (paper Alg. 5) — exactly the trade this module exists
+to measure in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.bmps import BMPS, contract_twolayer
+from repro.core.einsumsvd import RandomizedSVD
+from repro.core.peps import PEPS, QRUpdate, _apply_two_site_adjacent, random_peps
+from repro.core import gates as G
+
+
+@dataclasses.dataclass(frozen=True)
+class PEPSConfig:
+    name: str = "peps-rqc"
+    nrow: int = 8
+    ncol: int = 8
+    bond: int = 16            # evolution bond dimension r (RQC initial bond)
+    chi: int = 64             # contraction bond dimension m
+    ensemble: int = 32        # independent PEPS (VQE-style parameter sweep)
+    dtype: object = jnp.complex64
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def site_sharding(mesh: Mesh, shape, batched: bool,
+                  mode: str = "cyclops") -> NamedSharding:
+    """(B, p, u, l, d, r) sharding.
+
+    * ``cyclops``  — paper-style: one bond axis of every site tensor sharded
+      over 'model'; the ensemble over pod+data.  Contractions across the
+      sharded bond lower to collectives (the trade the paper's Alg. 5
+      exists to manage).
+    * ``ensemble`` — pure ensemble parallelism: members replicated over
+      'model', zero intra-tensor collectives, redundant compute on the
+      model axis (the VQE/ITE parameter-sweep regime).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_ok = lambda d: "model" in sizes and d % sizes["model"] == 0 and d > 1
+    parts: List = []
+    offset = 0
+    if batched:
+        baxes = _batch_axes(mesh)
+        n = 1
+        for a in baxes:
+            n *= sizes[a]
+        parts.append(baxes if shape[0] % n == 0 else None)
+        offset = 1
+    # physical axis: never sharded
+    parts.append(None)
+    used_model = mode != "cyclops"
+    for d in shape[offset + 1:]:
+        if not used_model and model_ok(d):
+            parts.append("model")
+            used_model = True
+        else:
+            parts.append(None)
+    return NamedSharding(mesh, P(*parts))
+
+
+def peps_shardings(state_or_specs, mesh: Mesh, batched: bool = True,
+                   mode: str = "cyclops"):
+    """Pytree of NamedShardings matching a (possibly vmapped) PEPS pytree."""
+    return jax.tree_util.tree_map(
+        lambda t: site_sharding(mesh, t.shape, batched, mode), state_or_specs)
+
+
+def abstract_ensemble(cfg: PEPSConfig):
+    """ShapeDtypeStruct PEPS ensemble (no allocation) for the dry-run."""
+    proto = random_peps(cfg.nrow, cfg.ncol, cfg.bond, jax.random.PRNGKey(0),
+                        dtype=cfg.dtype)
+
+    def widen(t):
+        return jax.ShapeDtypeStruct((cfg.ensemble,) + t.shape, cfg.dtype)
+
+    return jax.tree_util.tree_map(widen, proto)
+
+
+# ---------------------------------------------------------------------------
+# The two dry-run step functions (assignment: the paper's own technique)
+# ---------------------------------------------------------------------------
+
+def evolve_step(state: PEPS, key) -> PEPS:
+    """One TEBD layer: iSWAP on all horizontal + vertical neighbour pairs,
+    QR-SVD simple update with Gram orthogonalization (Alg. 1 + Alg. 5)."""
+    cfgd = state.sites[1][1].shape[4]  # interior bond dim
+    upd = QRUpdate(rank=cfgd, svd=RandomizedSVD(niter=1, oversample=4))
+    g = jnp.asarray(G.ISWAP, dtype=state.dtype)
+    nrow, ncol = state.nrow, state.ncol
+    for i in range(nrow):
+        for j in range(0, ncol - 1, 2):
+            key, sub = jax.random.split(key)
+            state = _apply_two_site_adjacent(state, g, (i, j), (i, j + 1), upd, sub)
+    for j in range(ncol):
+        for i in range(0, nrow - 1, 2):
+            key, sub = jax.random.split(key)
+            state = _apply_two_site_adjacent(state, g, (i, j), (i + 1, j), upd, sub)
+    return state
+
+
+def carry_model_constraint(mesh: Mesh):
+    """Shard the zip-up carry's truncated bond over 'model' (hillclimb C2)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+
+    def fn(v):
+        if m <= 1 or v.shape[0] % m != 0:
+            return v
+        parts = ["model"] + [None] * (v.ndim - 1)
+        return jax.lax.with_sharding_constraint(
+            v, NamedSharding(mesh, P(*parts)))
+    return fn
+
+
+def contract_step(state: PEPS, chi: int, key, gram_final: bool = False,
+                  constrain_carry=None) -> jnp.ndarray:
+    """<psi|psi> via two-layer IBMPS (the paper's headline algorithm)."""
+    option = BMPS(chi, RandomizedSVD(niter=1, oversample=4,
+                                     gram_final=gram_final),
+                  constrain_carry=constrain_carry)
+    return contract_twolayer(state.sites, state.sites, option, key)
+
+
+def batched_evolve(states: PEPS, keys) -> PEPS:
+    return jax.vmap(evolve_step)(states, keys)
+
+
+def batched_contract(states: PEPS, chi: int, keys, gram_final: bool = False,
+                     constrain_carry=None) -> jnp.ndarray:
+    return jax.vmap(lambda s, k: contract_step(s, chi, k, gram_final,
+                                               constrain_carry))(states, keys)

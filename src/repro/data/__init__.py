@@ -1,0 +1,2 @@
+"""Data pipeline."""
+from repro.data.pipeline import SyntheticLM, DataConfig, shard_batch  # noqa: F401

@@ -1,0 +1,82 @@
+"""Deterministic synthetic token pipeline with host sharding and prefetch.
+
+Production posture: every host materializes only its own shard of the
+global batch (``host_slice``), batches are a pure function of (seed, step)
+— so a restarted/elastically-resized job regenerates bit-identical data for
+any step without coordination — and a background thread prefetches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+class SyntheticLM:
+    """Zipfian token stream with structure (next-token = f(prev) mostly),
+    so losses actually decrease during the example training runs."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        assert cfg.global_batch % cfg.n_hosts == 0
+        self.host_batch = cfg.global_batch // cfg.n_hosts
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        probs = 1.0 / ranks
+        self._probs = probs / probs.sum()
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Pure function of (seed, step, host): the elastic-restart contract."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.host_id]))
+        b, s = self.host_batch, cfg.seq_len
+        fresh = rng.choice(cfg.vocab, size=(b, s + 1), p=self._probs)
+        # inject learnable structure: 75% of positions follow t+1 = (t*7+3)%V
+        follow = rng.random((b, s)) < 0.75
+        base = np.empty((b, s + 1), dtype=np.int64)
+        base[:, 0] = fresh[:, 0]
+        for t in range(s):  # sequential so the chain is self-consistent
+            nxt = (base[:, t] * 7 + 3) % cfg.vocab
+            base[:, t + 1] = np.where(follow[:, t], nxt, fresh[:, t + 1])
+        tokens = base[:, :-1].astype(np.int32)
+        labels = base[:, 1:].astype(np.int32)
+        return {"tokens": tokens, "labels": labels}
+
+    def iterate(self, start_step: int = 0, prefetch: int = 2
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        """Background-thread prefetching iterator."""
+        q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = start_step
+            while not stop.is_set():
+                q.put(self.batch_at(step))
+                step += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh, batch_sharding):
+    """Place a host batch onto the mesh with the batch sharding."""
+    import jax
+    return {k: jax.device_put(v, batch_sharding) for k, v in batch.items()}

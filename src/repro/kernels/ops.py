@@ -1,0 +1,57 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas`` picks the kernel path; the default follows the backend
+(Pallas on TPU, interpret-mode only under explicit request on CPU so model
+code never pays interpret overhead silently).  The pure-jnp fallbacks are
+the same code XLA fuses well on its own — they are also the oracles.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gram import gram as _gram, gram_complex as _gram_complex
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.tiled_matmul import tiled_matmul as _matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(a, b, use_pallas: bool = None, **kw):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _matmul(a, b, interpret=not _on_tpu(), **kw)
+    return _ref.matmul(a, b)
+
+
+def gram(a, use_pallas: bool = None, **kw):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    import jax.numpy as jnp
+    if jnp.issubdtype(a.dtype, jnp.complexfloating):
+        if use_pallas:
+            return _gram_complex(a, interpret=not _on_tpu())
+        return _ref.gram_complex(a)
+    if use_pallas:
+        return _gram(a, interpret=not _on_tpu(), **kw)
+    return _ref.gram(a)
+
+
+def attention(q, k, v, causal: bool = True, use_pallas: bool = None, **kw):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _flash(q, k, v, causal=causal, interpret=not _on_tpu(), **kw)
+    return _ref.attention(q, k, v, causal=causal)
+
+
+def ssd(x, b, c, a, use_pallas: bool = None, **kw):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _ssd(x, b, c, a, interpret=not _on_tpu(), **kw)
+    return _ref.ssd(x, b, c, a)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (used by the allclose sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(
+        jnp.result_type(a.dtype, b.dtype))
+
+
+def gram(a: jnp.ndarray) -> jnp.ndarray:
+    a32 = a.astype(jnp.float32)
+    return jnp.dot(a32.T, a32).astype(a.dtype)
+
+
+def gram_complex(a: jnp.ndarray) -> jnp.ndarray:
+    return a.conj().T @ a
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True) -> jnp.ndarray:
+    """Reference attention over (B, Hq, S, D) with GQA (B, Hkv, Sk, D) kv."""
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        logits = jnp.where(qi >= kj, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd(x: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+        a: jnp.ndarray) -> jnp.ndarray:
+    """Naive SSD recurrence: h_t = exp(a_t) h_{t-1} + B_t (x) x_t; y = C.h."""
+    bh, l, p = x.shape
+    n = b.shape[-1]
+
+    def step(h, inp):
+        xt, bt, ct, at = inp
+        h = jnp.exp(at) * h + jnp.outer(bt, xt)      # (N, P)
+        return h, ct @ h
+
+    def per_bh(xb, bb, cb, ab):
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                       bb.astype(jnp.float32),
+                                       cb.astype(jnp.float32),
+                                       ab.astype(jnp.float32)))
+        return y
+
+    y = jax.vmap(per_bh)(x, b, c, a)
+    return y.astype(x.dtype)

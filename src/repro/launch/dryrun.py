@@ -1,0 +1,368 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment MULTI-POD DRY-RUN steps 0-4).
+
+Lowers and compiles every (architecture x input shape) cell on the
+single-pod 16x16 mesh and the multi-pod 2x16x16 mesh, prints
+memory_analysis / cost_analysis, and records the roofline terms.
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count on first init.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun.json
+    python -m repro.launch.dryrun --arch peps-rqc --shape contract
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_roofline
+from repro.models.model import SHAPES, build
+from repro.optim.adamw import OptConfig
+
+LM_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+PEPS_SHAPES = ["evolve", "contract"]
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _skip_record(arch, shape, mesh_name, reason):
+    return {"arch": arch, "shape": shape, "mesh": mesh_name,
+            "status": "skipped", "reason": reason}
+
+
+def _scan_trips(cfg) -> int:
+    """Trip count of the layer-level scans (all families keep them equal)."""
+    if cfg.family == "hybrid":
+        return cfg.hybrid_group - 1
+    return cfg.n_layers
+
+
+def _unroll_factor(trips: int) -> int:
+    for k in (2, 3, 5, 7):
+        if trips % k == 0:
+            return k
+    return trips  # prime: full unroll of the (short) scan
+
+
+def _lower_cell(bundle, cfg, io, kind):
+    params = bundle.abstract_params()
+    pshard = bundle.param_shardings()
+    if kind == "train":
+        opt = bundle.abstract_opt_state()
+        oshard = bundle.opt_shardings()
+        fn = jax.jit(bundle.train_step,
+                     in_shardings=(pshard, oshard, io["batch_shardings"]),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn.lower(params, opt, io["batch"])
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            fn = jax.jit(bundle.encode_step,
+                         in_shardings=(pshard, io["frames_sharding"]))
+            return fn.lower(params, io["frames"])
+        fn = jax.jit(bundle.prefill_step,
+                     in_shardings=(pshard, io["tokens_sharding"]))
+        return fn.lower(params, io["tokens"])
+    cshard = io["cache_shardings"]
+    args = [params, io["cache"], io["token"]]
+    in_sh = [pshard, cshard, io["token_sharding"]]
+    if "positions" in io:
+        args.append(io["positions"])
+        in_sh.append(None)
+    fn = jax.jit(bundle.serve_step,
+                 in_shardings=tuple(in_sh),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(1,))
+    return fn.lower(*args)
+
+
+def run_lm_cell(arch: str, shape: str, multi_pod: bool, rules=None,
+                verbose: bool = True, cfg_overrides=None) -> dict:
+    import dataclasses as _dc
+    from repro.launch.hlo_analysis import collective_bytes
+    base_cfg = _dc.replace(configs.get(arch), attn_unroll=True,
+                           **(cfg_overrides or {}))
+    mesh_name = _mesh_name(multi_pod)
+    seq, gbatch, kind = SHAPES[shape]
+    if shape == "long_500k" and not base_cfg.sub_quadratic:
+        return _skip_record(arch, shape, mesh_name,
+                            "full attention: O(L) KV at 500k infeasible "
+                            "(DESIGN.md SS4)")
+    if kind == "decode" and base_cfg.family == "encdec" and shape == "long_500k":
+        return _skip_record(arch, shape, mesh_name, "whisper 448-token decoder")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    # --- compile 1: the deployable scan program (memory analysis + proof) ---
+    cfg = _dc.replace(base_cfg, layer_unroll=1)
+    bundle = build(cfg, mesh, rules=rules, opt_cfg=OptConfig())
+    io = bundle.input_specs(shape)
+    lowered = _lower_cell(bundle, cfg, io, kind)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost1 = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo1 = compiled.as_text()
+    coll1, _, _ = collective_bytes(hlo1)
+
+    # --- unroll-probe compiles — cost_analysis counts a scan body once, so
+    # comparing unroll factors isolates the per-layer cost; extrapolate. -----
+    def _probe(**knobs):
+        cfg_k = _dc.replace(base_cfg, **knobs)
+        bundle_k = build(cfg_k, mesh, rules=rules, opt_cfg=OptConfig())
+        io_k = bundle_k.input_specs(shape)
+        compiled_k = _lower_cell(bundle_k, cfg_k, io_k, kind).compile()
+        ck = compiled_k.cost_analysis()
+        hk = compiled_k.as_text()
+        cb, det, cnt = collective_bytes(hk)
+        return {"flops": float(ck.get("flops", 0.0)),
+                "bytes": float(ck.get("bytes accessed", 0.0)),
+                "coll": float(cb), "detail": det, "counts": cnt}
+
+    f11 = {"flops": float(cost1.get("flops", 0.0)),
+           "bytes": float(cost1.get("bytes accessed", 0.0)),
+           "coll": float(coll1)}
+
+    if cfg.family == "hybrid":
+        # nested scans: groups (G) x mamba-per-group (per) + shared block
+        n_groups = cfg.n_layers // cfg.hybrid_group
+        per = cfg.hybrid_group - 1
+        kg = _unroll_factor(n_groups)
+        kl = _unroll_factor(per)
+        f_g = _probe(group_unroll=kg)
+        f_l = _probe(layer_unroll=kl)
+
+        def correct(key):
+            sm = (f_g[key] - f11[key]) / (kg - 1)       # shared + 1 mamba
+            mamba = (f_l[key] - f11[key]) / (kl - 1)    # 1 mamba
+            return f11[key] + (n_groups - 1) * sm +                 n_groups * (per - 1) * mamba
+
+        cost = {"flops": correct("flops"), "bytes accessed": correct("bytes")}
+        coll_corr = correct("coll")
+        detail_k, counts_k = f_l["detail"], f_l["counts"]
+    else:
+        trips = _scan_trips(cfg)
+        k = _unroll_factor(trips)
+        f_k = _probe(layer_unroll=k)
+
+        def correct(key):
+            body = (f_k[key] - f11[key]) / (k - 1)
+            return f11[key] + (trips - 1) * body
+
+        cost = {"flops": correct("flops"), "bytes accessed": correct("bytes")}
+        coll_corr = correct("coll")
+        detail_k, counts_k = f_k["detail"], f_k["counts"]
+
+    # scale the per-kind detail proportionally for reporting
+    scale = coll_corr / max(sum(detail_k.values()), 1.0)
+    detail = {kk: int(v * scale) for kk, v in detail_k.items()}
+
+    roof = build_roofline(arch, shape, mesh_name, chips, cost,
+                          "", cfg, kind, seq, gbatch, mem)
+    roof.collective_bytes = float(coll_corr)
+    roof.collective_detail = detail
+    roof.collective_counts = counts_k
+    roof.finish()
+
+    # --- compile 3 (train only): deployable microbatched step — the
+    # memory_analysis that must fit HBM (activations scale 1/m). -----------
+    deploy_temp = None
+    microbatches = 8 if kind == "train" else 1
+    if kind == "train" and gbatch % microbatches == 0:
+        import functools as _ft
+        bundle_mb = build(cfg, mesh, rules=rules, opt_cfg=OptConfig())
+        step_mb = _ft.partial(bundle_mb.train_step, microbatches=microbatches)
+        pshard = bundle_mb.param_shardings()
+        oshard = bundle_mb.opt_shardings()
+        fn = jax.jit(step_mb,
+                     in_shardings=(pshard, oshard, io["batch_shardings"]),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        mem_mb = fn.lower(bundle_mb.abstract_params(),
+                          bundle_mb.abstract_opt_state(),
+                          io["batch"]).compile().memory_analysis()
+        deploy_temp = float(mem_mb.temp_size_in_bytes)
+    rec = roof.row()
+    rec.update({
+        "status": "ok", "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "output_bytes_per_device": float(mem.output_size_in_bytes),
+        "alias_bytes_per_device": float(mem.alias_size_in_bytes),
+        "deploy_temp_bytes_per_device": deploy_temp,
+        "microbatches": microbatches if deploy_temp is not None else None,
+    })
+    if verbose:
+        print(f"[{arch} x {shape} @ {mesh_name}] OK "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB per device"
+              + (f" | deploy(mb={microbatches}): "
+                 f"temp={deploy_temp/2**30:.2f}GiB" if deploy_temp else ""))
+        print(f"  cost_analysis: flops/dev={rec['per_device_flops']:.3e} "
+              f"bytes/dev={rec['per_device_bytes']:.3e}")
+        print(f"  collectives/dev: {rec['collective_bytes']:.3e} B "
+              f"{rec['collective_counts']}")
+        print(f"  roofline: compute={rec['compute_s']*1e3:.2f}ms "
+              f"memory={rec['memory_s']*1e3:.2f}ms "
+              f"collective={rec['collective_s']*1e3:.2f}ms "
+              f"-> bottleneck={rec['bottleneck']} "
+              f"frac={rec['roofline_frac']:.3f}")
+    return rec
+
+
+def run_peps_cell(shape: str, multi_pod: bool, verbose: bool = True,
+                  gram_final: bool = False, constrain_carry: bool = False,
+                  mode: str = "cyclops") -> dict:
+    # repro.core enables jax x64 on import (complex128 PEPS); restore the
+    # flag afterwards so later LM cells keep int32/bf16 semantics.
+    x64_before = jax.config.jax_enable_x64
+    from repro.core.sharding import (PEPSConfig, abstract_ensemble,
+                                     batched_contract, batched_evolve,
+                                     peps_shardings)
+    pcfg = PEPSConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = _mesh_name(multi_pod)
+    chips = mesh.devices.size
+    states = abstract_ensemble(pcfg)
+    sshard = peps_shardings(states, mesh, batched=True, mode=mode)
+    keys = jax.ShapeDtypeStruct((pcfg.ensemble, 2), jnp.uint32)
+    t0 = time.time()
+    if shape == "evolve":
+        fn = jax.jit(batched_evolve, in_shardings=(sshard, None),
+                     out_shardings=sshard)
+        lowered = fn.lower(states, keys)
+    else:
+        from repro.core.sharding import batched_contract as bc, \
+            carry_model_constraint
+        cc = carry_model_constraint(mesh) if constrain_carry else None
+        fn = jax.jit(lambda s, k: bc(s, pcfg.chi, k, gram_final, cc),
+                     in_shardings=(sshard, None))
+        lowered = fn.lower(states, keys)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+
+    from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    coll, detail, counts = collective_bytes(hlo)
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    terms = {"compute": flops / PEAK_FLOPS_BF16, "memory": nbytes / HBM_BW,
+             "collective": coll / ICI_BW}
+    rec = {
+        "arch": "peps-rqc", "shape": shape, "mesh": mesh_name, "chips": chips,
+        "status": "ok", "per_device_flops": flops, "per_device_bytes": nbytes,
+        "collective_bytes": float(coll), "collective_detail": detail,
+        "collective_counts": counts,
+        "compute_s": terms["compute"], "memory_s": terms["memory"],
+        "collective_s": terms["collective"],
+        "bottleneck": max(terms, key=terms.get),
+        "step_s": max(terms.values()),
+        "roofline_frac": terms["compute"] / max(terms.values()),
+        "arg_bytes_per_device": float(mem.argument_size_in_bytes),
+        "temp_bytes_per_device": float(mem.temp_size_in_bytes),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "model_flops": 0.0, "useful_ratio": 0.0,
+    }
+    jax.config.update("jax_enable_x64", x64_before)
+    if verbose:
+        print(f"[peps-rqc x {shape} @ {mesh_name}] OK "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"  args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB per device")
+        print(f"  roofline: compute={terms['compute']*1e3:.2f}ms "
+              f"memory={terms['memory']*1e3:.2f}ms "
+              f"collective={terms['collective']*1e3:.2f}ms "
+              f"-> {rec['bottleneck']}")
+    return rec
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose=True) -> dict:
+    try:
+        if arch == "peps-rqc":
+            return run_peps_cell(shape, multi_pod, verbose)
+        return run_lm_cell(arch, shape, multi_pod, verbose=verbose)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape, "mesh": _mesh_name(multi_pod),
+                "status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (or peps-rqc)")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    def done(a, s, m):
+        return any(r["arch"] == a and r["shape"] == s and r["mesh"] == m
+                   and r.get("status") in ("ok", "skipped") for r in results)
+
+    def save():
+        out_path.write_text(json.dumps(results, indent=1, default=str))
+
+    if args.all:
+        cells = [(a, s) for a in configs.ARCHS for s in LM_SHAPES]
+        cells += [("peps-rqc", s) for s in PEPS_SHAPES]
+        meshes = [False] if args.single_pod_only else [False, True]
+        for multi_pod in meshes:
+            for arch, shape in cells:
+                if done(arch, shape, _mesh_name(multi_pod)):
+                    continue
+                rec = run_cell(arch, shape, multi_pod)
+                results = [r for r in results if not (
+                    r["arch"] == arch and r["shape"] == shape and
+                    r["mesh"] == rec["mesh"])]
+                results.append(rec)
+                save()
+        n_ok = sum(1 for r in results if r.get("status") == "ok")
+        n_skip = sum(1 for r in results if r.get("status") == "skipped")
+        n_err = sum(1 for r in results if r.get("status") == "error")
+        print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+              f"(of {len(results)} cells)")
+        raise SystemExit(1 if n_err else 0)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    results = [r for r in results if not (
+        r["arch"] == rec["arch"] and r["shape"] == rec["shape"] and
+        r["mesh"] == rec["mesh"])]
+    results.append(rec)
+    save()
+    raise SystemExit(0 if rec.get("status") in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

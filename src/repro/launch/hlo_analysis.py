@@ -1,0 +1,75 @@
+"""Parse collective-communication bytes out of compiled (post-SPMD) HLO.
+
+``cost_analysis()`` does not expose collective bytes, so we scan the
+optimized HLO text for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops and sum their operand sizes (assignment
+§ROOFLINE).  Shapes are parsed from the standard HLO type syntax, e.g.
+``bf16[128,4096]{1,0}``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[2,128]{1,0} all-gather(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int], Dict[str, int]]:
+    """Total bytes + per-kind bytes + per-kind op counts from HLO text.
+
+    Counts each collective's *output* size once (the `-done` of async pairs
+    is skipped so started collectives are not double counted)."""
+    per_kind_bytes: Dict[str, int] = defaultdict(int)
+    per_kind_count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_inner, single, kind = m.groups()
+        if single is not None:
+            nbytes = _shape_bytes(single)
+        else:
+            nbytes = sum(_shape_bytes(p) for p in tuple_inner.split(",")
+                         if "[" in p)
+        per_kind_bytes[kind] += nbytes
+        per_kind_count[kind] += 1
+    total = sum(per_kind_bytes.values())
+    return total, dict(per_kind_bytes), dict(per_kind_count)
+
+
+def reshape_transpose_count(hlo_text: str) -> int:
+    """Crude layout-churn indicator: number of (non-bitcast) transposes."""
+    return sum(1 for l in hlo_text.splitlines()
+               if re.search(r"=\s*\S+\s+transpose\(", l))

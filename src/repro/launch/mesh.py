@@ -1,0 +1,35 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  The single-pod mesh is 16x16 = 256 chips
+(data, model); the multi-pod mesh adds a leading ``pod`` axis:
+(2, 16, 16) = 512 chips.  The ``pod`` axis is pure data parallelism with
+one (optionally compressed) cross-pod gradient all-reduce per step.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """General mesh helper with Auto axis types (tests, elastic restarts)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1x1 mesh on the local device (smoke tests / examples)."""
+    return make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e-class hardware constants used by the roofline (assignment §ROOFLINE)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

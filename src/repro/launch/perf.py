@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver (assignment §PERFORMANCE HILLCLIMBING).
+
+Runs named (cell x variant) experiments through the dry-run machinery and
+appends hypothesis -> change -> before/after records to results/perf_log.json.
+
+    python -m repro.launch.perf --cell zamba-train --variant ssd_chunk_64
+    python -m repro.launch.perf --list
+"""
+import argparse
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+
+# (cell, variant) -> (arch, shape, cfg_overrides, rules_overrides, hypothesis)
+EXPERIMENTS = {
+    "zamba-train": {
+        "_arch": ("zamba2-2.7b", "train_4k"),
+        "baseline": ({}, {}, "paper-faithful baseline (SSD chunk 128, f32 "
+                             "intra-chunk, nothing_saveable remat)"),
+        "ssd_chunk_64": ({"ssm_chunk": 64}, {},
+                         "memory term is dominated by the (B,H,NC,C,C) SSD "
+                         "decay/score tensors ~ L*C per series; halving the "
+                         "chunk to 64 halves those bytes at ~unchanged GEMM "
+                         "flops -> memory term down ~25-40%"),
+        "ssd_chunk_32": ({"ssm_chunk": 32}, {},
+                         "continue the chunk sweep: L*C shrinks another 2x, "
+                         "but intra-chunk GEMMs lose MXU efficiency below "
+                         "~64 — expect diminishing returns"),
+        "ssd_chunk_256": ({"ssm_chunk": 256}, {},
+                          "reverse direction: bigger chunks amortize the "
+                          "state recurrence but quadruple the L*C bytes -> "
+                          "expect memory term UP (control experiment)"),
+        "head_sharded_ssd": ({}, {},
+                             "REVISED after chunk sweep refuted: napkin "
+                             "vs mamba2 shows SSD intermediates are "
+                             "replicated over 'model' (the group->head "
+                             "repeat severs propagation). Explicit "
+                             "head-axis constraints shard them 16-way -> "
+                             "memory term down ~10x"),
+        "head_sharded_chunk64": ({"ssm_chunk": 64}, {},
+                                 "re-test the chunk hypothesis with "
+                                 "sharding fixed: now L*C bytes should "
+                                 "actually show up"),
+    },
+    "arctic-decode": {
+        "_arch": ("arctic-480b", "decode_32k"),
+        "baseline": ({}, {}, "paper-faithful-substrate baseline: ZeRO-3 "
+                             "expert weights gathered over 'data' per layer"),
+        "expert_tp": ({"moe_impl": "expert_tp"}, {},
+                      "decode moves 35 layers x ~1.7GB of gathered expert "
+                      "weights for only 128 tokens; keeping the expert ffn "
+                      "axis stationary ('data'-sharded) and moving the "
+                      "~2MB token set instead should cut the collective "
+                      "term ~10x"),
+        "expert_tp_bf16": ({"moe_impl": "expert_tp",
+                            "moe_psum_dtype": "bf16"}, {},
+                           "on top of expert_tp, halve the combine psum "
+                           "payload (f32 -> bf16)"),
+    },
+    "qwen3moe-decode": {
+        "_arch": ("qwen3-moe-30b-a3b", "decode_32k"),
+        "baseline": ({}, {}, "second MoE decode cell (128e top-8, small "
+                             "768-wide experts)"),
+        "expert_tp": ({"moe_impl": "expert_tp"}, {},
+                      "transfer of the arctic finding: weights-stationary "
+                      "routing should cut the collective term here too"),
+    },
+    "granite-train": {
+        "_arch": ("granite-8b", "train_4k"),
+        "baseline": ({}, {}, "dense train reference"),
+        "remat_dots": ({"remat_policy": "dots"}, {},
+                       "nothing_saveable recomputes every matmul in the "
+                       "backward: saving dot outputs trades ~1GiB/layer of "
+                       "residuals for ~2x fewer forward FLOPs/bytes in the "
+                       "backward -> memory term down"),
+        "attn_chunk_4096": ({"attn_chunk": 4096}, {},
+                            "fewer online-softmax passes: running acc/max "
+                            "re-read per chunk; 2 chunks -> 1 at 4k train "
+                            "seq halves those intermediate bytes"),
+        "bf16_rmsnorm": ({}, {},
+                         "HLO shows XLA hoisting a WHOLE-STACK bf16->f32 "
+                         "convert of the saved residuals out of the "
+                         "backward loop (38.7GB materialize + 2 converts) "
+                         "because rms_norm's first op casts x to f32. "
+                         "bf16-native rms_norm (f32 accumulation via dot) "
+                         "kills the convert -> temp -38GiB, memory term "
+                         "down ~30-50%"),
+    },
+}
+
+
+def run_lm_variant(arch, shape, overrides, rules, label):
+    from repro.launch.dryrun import run_lm_cell
+    cfg_overrides = dict(overrides)
+    remat_policy = cfg_overrides.pop("remat_policy", None)
+    if remat_policy:
+        cfg_overrides["remat_policy"] = remat_policy
+    return run_lm_cell(arch, shape, multi_pod=False, rules=rules or None,
+                       cfg_overrides=cfg_overrides, verbose=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=False)
+    ap.add_argument("--variant", required=False)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="results/perf_log.json")
+    args = ap.parse_args()
+
+    if args.list:
+        for cell, d in EXPERIMENTS.items():
+            print(cell, "->", [k for k in d if k != "_arch"])
+        return
+
+    cell = EXPERIMENTS[args.cell]
+    arch, shape = cell["_arch"]
+    overrides, rules, hypothesis = cell[args.variant]
+    print(f"### {args.cell}/{args.variant}")
+    print(f"hypothesis: {hypothesis}")
+    rec = run_lm_variant(arch, shape, overrides, rules, args.variant)
+    rec.update({"cell": args.cell, "variant": args.variant,
+                "hypothesis": hypothesis})
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    log = json.loads(out.read_text()) if out.exists() else []
+    log.append(rec)
+    out.write_text(json.dumps(log, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Three-term roofline model from the compiled dry-run (assignment §ROOFLINE).
+
+  compute    = HLO_FLOPs / (chips x 197 TF/s bf16)
+  memory     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective = collective_bytes / (chips x 50 GB/s ICI link)
+
+``cost_analysis()`` on an SPMD executable reports PER-DEVICE flops/bytes
+(validated empirically in EXPERIMENTS.md §Dry-run), so global HLO_FLOPs =
+per-device x chips and each term divides back by chips — i.e. the terms are
+computed directly from the per-device numbers.  MODEL_FLOPS uses the 6*N*D
+(train) / 2*N*B (decode) convention with N_active for MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch import hlo_analysis
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.common import Config
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    per_device_flops: float
+    per_device_bytes: float
+    collective_bytes: float          # per device (from the SPMD program)
+    collective_detail: Dict[str, int]
+    collective_counts: Dict[str, int]
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0        # MODEL_FLOPS / (HLO_FLOPs x chips)
+    step_s: float = 0.0              # max of the three terms
+    roofline_frac: float = 0.0       # compute_s / step_s ("% of roofline")
+    arg_bytes_per_device: float = 0.0
+    temp_bytes_per_device: float = 0.0
+
+    def finish(self):
+        self.compute_s = self.per_device_flops / PEAK_FLOPS_BF16
+        self.memory_s = self.per_device_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.step_s = max(terms.values())
+        if self.model_flops and self.per_device_flops:
+            self.useful_ratio = self.model_flops / (self.per_device_flops *
+                                                    self.chips)
+        ideal = self.model_flops / (PEAK_FLOPS_BF16 * self.chips) \
+            if self.model_flops else self.compute_s
+        self.roofline_frac = ideal / self.step_s if self.step_s else 0.0
+        return self
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def param_count(cfg: Config, active_only: bool = False) -> float:
+    """Parameter count from the config (dense or active-expert subset)."""
+    d, v = cfg.d_model, cfg.vocab
+    n = v * d * 2  # embed + head
+    if cfg.family in ("dense", "moe", "vlm"):
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head \
+            + cfg.n_heads * cfg.d_head * d
+        mlp = 3 * d * cfg.d_ff if cfg.d_ff else 0
+        moe = 0.0
+        if cfg.family == "moe":
+            e = cfg.top_k if active_only else cfg.n_experts
+            moe = e * 3 * d * cfg.d_expert_ff + d * cfg.n_experts
+        n += cfg.n_layers * (attn + mlp + moe + 2 * d)
+    elif cfg.family == "ssm":
+        per = _ssm_params(cfg)
+        n += cfg.n_layers * per
+    elif cfg.family == "hybrid":
+        per = _ssm_params(cfg)
+        n_groups = cfg.n_layers // cfg.hybrid_group
+        mamba_layers = n_groups * (cfg.hybrid_group - 1)
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head \
+            + cfg.n_heads * cfg.d_head * d + 3 * d * cfg.d_ff
+        n += mamba_layers * per + attn  # shared block counted once
+    elif cfg.family == "encdec":
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head \
+            + cfg.n_heads * cfg.d_head * d
+        mlp = 3 * d * cfg.d_ff
+        n += cfg.n_enc_layers * (attn + mlp) + cfg.n_layers * (2 * attn + mlp)
+    return float(n)
+
+
+def _ssm_params(cfg: Config) -> float:
+    d, din = cfg.d_model, cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return (2 * d * din + 2 * d * gn + d * cfg.ssm_heads + din * d +
+            cfg.conv_width * (din + 2 * gn))
+
+
+def model_flops(cfg: Config, shape_kind: str, seq: int, gbatch: int) -> float:
+    """6*N*D for training, 2*N*tokens for decode/prefill (N_active for MoE)."""
+    n_active = param_count(cfg, active_only=True)
+    tokens = seq * gbatch
+    if shape_kind == "train":
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * gbatch      # decode: one token per sequence
+
+
+def build_roofline(arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: Dict, hlo_text: str, cfg: Config, kind: str,
+                   seq: int, gbatch: int, mem=None) -> Roofline:
+    coll_total, coll_detail, coll_counts = hlo_analysis.collective_bytes(hlo_text)
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        per_device_flops=float(cost.get("flops", 0.0)),
+        per_device_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=float(coll_total),
+        collective_detail=coll_detail,
+        collective_counts=coll_counts,
+        model_flops=model_flops(cfg, kind, seq, gbatch),
+    )
+    if mem is not None:
+        r.arg_bytes_per_device = float(mem.argument_size_in_bytes)
+        r.temp_bytes_per_device = float(mem.temp_size_in_bytes)
+    return r.finish()

@@ -1,0 +1,144 @@
+"""Fault-tolerant training loop (launcher).
+
+Production behaviours exercised here, sized to run on 1 CPU device:
+
+* auto-resume from the newest valid checkpoint (crash/preemption recovery);
+* atomic async checkpoints every ``--checkpoint-every`` steps;
+* deterministic data as f(seed, step) — restart-safe without data state;
+* per-step watchdog timing with straggler logging;
+* gradient-accumulation microbatching;
+* ``--simulate-failure N`` kills the process at step N (chaos testing: the
+  restarted run must continue bit-identically — asserted in tests);
+* elastic restarts: restore reshards onto whatever mesh this run uses.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 50 --checkpoint-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.models.model import build
+from repro.optim.adamw import OptConfig, adamw_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="1x1", help="e.g. 1x1, 2x4, 2x2x2")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--log-file", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--simulate-failure", type=int, default=None,
+                    help="os._exit at this step (chaos test)")
+    ap.add_argument("--slow-step-factor", type=float, default=3.0,
+                    help="watchdog: warn when a step exceeds factor x median")
+    args = ap.parse_args(argv)
+
+    shape = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("pod", "data", "model")[-len(shape):] if len(shape) == 3 else \
+        ("data", "model")[:len(shape)]
+    mesh = make_mesh(shape, axes)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    bundle = build(cfg, mesh, opt_cfg=OptConfig(lr=args.lr))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch, seed=args.seed))
+
+    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+    start_step = 0
+    params = opt_state = None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        start_step = ckpt.latest_step()
+        print(f"[train] resuming from checkpoint step {start_step}")
+        tree = {"params": bundle.abstract_params(),
+                "opt": bundle.abstract_opt_state()}
+        shardings = {"params": bundle.param_shardings(),
+                     "opt": bundle.opt_shardings()}
+        restored = ckpt.restore(start_step, tree, shardings)
+        params, opt_state = restored["params"], restored["opt"]
+    if params is None:
+        params = bundle.init(jax.random.PRNGKey(args.seed))
+        opt_state = adamw_init(params)
+
+    step_fn = jax.jit(
+        functools.partial(bundle.train_step, microbatches=args.microbatches),
+        donate_argnums=(0, 1))
+
+    log_f = open(args.log_file, "a") if args.log_file else None
+    bspec = bundle.batch_sharding()
+    durations = []
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        batch = {k: jax.device_put(v, bspec)
+                 for k, v in data.batch_at(step).items()}
+        if cfg.family == "vlm":
+            import jax.numpy as jnp
+            b, s = batch["tokens"].shape
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), (3, b, s))
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+            rng = np.random.default_rng(step)
+            batch["frames"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.enc_frames, cfg.d_model), dtype=np.float32))
+        try:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+        except Exception as e:  # noqa: BLE001 — step-level fault tolerance
+            print(f"[train] step {step} FAILED ({e}); checkpoint + abort")
+            if ckpt is not None:
+                ckpt.save(step, {"params": params, "opt": opt_state},
+                          blocking=True)
+            raise
+        dt = time.time() - t0
+        durations.append(dt)
+        med = float(np.median(durations[-20:]))
+        if len(durations) > 5 and dt > args.slow_step_factor * med:
+            print(f"[train] WATCHDOG: step {step} took {dt:.2f}s "
+                  f"({dt/med:.1f}x median) — straggler suspected")
+        rec = {"step": step, "loss": loss, "sec": round(dt, 4)}
+        print(f"[train] {json.dumps(rec)}")
+        if log_f:
+            log_f.write(json.dumps(rec) + "\n")
+            log_f.flush()
+        next_step = step + 1
+        if ckpt is not None and next_step % args.checkpoint_every == 0:
+            ckpt.save(next_step, {"params": params, "opt": opt_state})
+        if args.simulate_failure is not None and next_step == args.simulate_failure:
+            print(f"[train] simulating hard failure at step {next_step}")
+            if ckpt is not None:
+                ckpt.wait()
+            os._exit(42)
+
+    if ckpt is not None:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state},
+                  blocking=True)
+    print("[train] done")
+    return params
+
+
+if __name__ == "__main__":
+    main()

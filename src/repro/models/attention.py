@@ -1,0 +1,226 @@
+"""GQA attention with RoPE/M-RoPE/qk-norm, full-sequence and cached decode."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Config, P_, apply_mrope, apply_rope, constrain,
+                                 rms_norm)
+
+
+def attn_specs(cfg: Config, n_layers: int, cross: bool = False) -> Dict[str, P_]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    L = (n_layers,)
+    specs = {
+        "wq": P_(L + (d, h, dh), ("layers", "embed", "heads", "head_dim")),
+        "wk": P_(L + (d, kv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "wv": P_(L + (d, kv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "wo": P_(L + (h, dh, d), ("layers", "heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = P_(L + (dh,), ("layers", "head_dim"), init="ones")
+        specs["k_norm"] = P_(L + (dh,), ("layers", "head_dim"), init="ones")
+    return specs
+
+
+def _qkv(x, p, cfg: Config, mesh, positions, rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope and positions is not None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    m = _model_size(mesh)
+    h, s = q.shape[2], q.shape[1]
+    if h % max(m, 1) == 0:
+        q = constrain(q, mesh, ("batch", None, "act_heads", None))
+        k = constrain(k, mesh, ("batch", None, "act_heads", None))
+    elif m > 1 and s % m == 0:
+        # heads unshardable on this TP size: sequence-parallel queries
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.models.common import batch_axes
+        b_ax = batch_axes(mesh)
+        q = jax.lax.with_sharding_constraint(
+            q, NamedSharding(mesh, PartitionSpec(b_ax if b_ax else None,
+                                                 "model", None, None)))
+    return q, k, v
+
+
+def _model_size(mesh) -> int:
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+
+def _constrain_scores(x, mesh):
+    """Shard the score tensor (b, kv, group, s, t) over 'model'.
+
+    When total heads divide the TP size, GSPMD already tiles (kv, group)
+    2-D-wise from the head-sharded q — constraining would FIGHT that
+    propagation (involuntary full remat).  Only when heads are unshardable
+    do we fall back to query-sequence sharding (matching the seq-sharded q
+    produced by _qkv)."""
+    m = _model_size(mesh)
+    if m <= 1:
+        return x
+    kv, group, s = x.shape[1], x.shape[2], x.shape[3]
+    if (kv * group) % m == 0:
+        return x                                  # GSPMD's 2-D head tiling
+    if s % m == 0:
+        from repro.models.common import batch_axes
+        from jax.sharding import NamedSharding, PartitionSpec
+        b_ax = batch_axes(mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(b_ax if b_ax else None,
+                                                 None, None, "model", None)))
+    return x
+
+
+def _sdpa(q, k, v, causal: bool, kv_len: Optional[jnp.ndarray] = None,
+          mesh=None):
+    """(B,S,H,dh) x (B,Sk,KV,dh) GQA attention; f32 softmax (naive path)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (dh ** 0.5)
+    sk = k.shape[1]
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        mask = qi >= kj
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]       # (B, Sk)
+        logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    logits = _constrain_scores(logits, mesh)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, kv_len: Optional[jnp.ndarray] = None,
+                  mesh=None, chunk: int = 2048, unroll: bool = False):
+    """Online-softmax attention: lax.scan over KV chunks — the jnp analogue
+    of the flash kernel.  Never materializes the (S, Sk) score matrix, which
+    turns the train/prefill memory-roofline term from O(S^2) to O(S*chunk).
+    """
+    b, s, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    if sk <= chunk:
+        return _sdpa(q, k, v, causal, kv_len, mesh)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    qg = (q.reshape(b, s, kvh, group, dh).astype(jnp.float32) / (dh ** 0.5))
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, kvh, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, kvh, dh), 1, 0)
+    qi = jnp.arange(s)[:, None]
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        kb, vb, idx = inp
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.float32))
+        logits = _constrain_scores(logits, mesh)
+        kj = idx * chunk + jnp.arange(chunk)[None, :]
+        valid = jnp.ones((s, chunk), bool) if not causal else (qi >= kj)
+        if kv_len is not None:
+            vlen = kj[None, :, :] < kv_len[:, None, None]       # (B,1,chunk)
+            logits = jnp.where(vlen[:, None, None], logits, -1e30)
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        scale = jnp.exp(m_run - m_new)
+        l_new = scale * l_run + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + \
+            jnp.einsum("bkgst,btkd->bkgsd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, group, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, group, s, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)),
+        unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def _sdpa_dispatch(cfg: Config):
+    import functools
+    if cfg.attn_impl == "chunked":
+        return functools.partial(_sdpa_chunked, chunk=cfg.attn_chunk,
+                                 unroll=cfg.attn_unroll)
+    return _sdpa
+
+
+def attn_apply(x, p, cfg: Config, mesh, positions=None, causal: bool = True,
+               rope: bool = True):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _qkv(x, p, cfg, mesh, positions, rope)
+    out = _sdpa_dispatch(cfg)(q, k, v, causal, mesh=mesh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attn_prefill(x, p, cfg: Config, mesh, positions=None, rope: bool = True):
+    """Prefill: returns output and the (k, v) cache for this layer."""
+    q, k, v = _qkv(x, p, cfg, mesh, positions, rope)
+    out = _sdpa_dispatch(cfg)(q, k, v, causal=True, mesh=mesh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def attn_decode(x, p, cfg: Config, mesh, cache_k, cache_v, index,
+                positions=None, rope: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (B,1,D); cache_{k,v}: (B,S,KV,dh); index: scalar.
+
+    Returns (out, new_cache_k, new_cache_v)."""
+    q, k, v = _qkv(x, p, cfg, mesh, positions, rope)
+    zero = jnp.zeros((), index.dtype) if hasattr(index, "dtype") else 0
+    idx4 = (zero, index, zero, zero)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           idx4)
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           idx4)
+    b = x.shape[0]
+    kv_len = jnp.full((b,), index + 1, jnp.int32)
+    # q-len is 1: the naive matvec path is already memory-optimal for decode
+    out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                causal=False, kv_len=kv_len, mesh=mesh)
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)),
+            cache_k, cache_v)
+
+
+def cross_attn_apply(x, p, cfg: Config, mesh, mem_k, mem_v):
+    """Cross-attention against precomputed encoder K/V (B, T, KV, dh)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    q = constrain(q, mesh, ("batch", None, "act_heads", None))
+    out = _sdpa_dispatch(cfg)(q, mem_k.astype(q.dtype), mem_v.astype(q.dtype),
+                              causal=False, mesh=mesh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_kv(mem, p, cfg: Config):
+    """Encoder memory -> cross K/V using this layer's wk/wv."""
+    k = jnp.einsum("btd,dhk->bthk", mem, p["wk"].astype(mem.dtype))
+    v = jnp.einsum("btd,dhk->bthk", mem, p["wv"].astype(mem.dtype))
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    return k, v

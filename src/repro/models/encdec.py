@@ -1,0 +1,144 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+``input_specs`` supplies precomputed log-mel *frame embeddings* (B, T, D);
+the conv frontend is out of scope per the assignment.  The encoder is a
+non-causal transformer; the decoder adds cross-attention against the
+encoder output with per-layer precomputed cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Config, P_, constrain, cross_entropy, rms_norm, swiglu
+from repro.models import attention as att
+from repro.models.transformer import mlp_specs
+
+
+def encdec_specs(cfg: Config) -> Dict[str, object]:
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": P_((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        # learned decoder positions; sized for the largest assigned decode shape
+        "pos_dec": P_((32768, cfg.d_model), (None, "embed"), init="small"),
+        "enc": {
+            "ln1": P_((Le, cfg.d_model), ("layers", "embed"), init="ones"),
+            "ln2": P_((Le, cfg.d_model), ("layers", "embed"), init="ones"),
+            "attn": att.attn_specs(cfg, Le),
+            "mlp": mlp_specs(cfg, Le),
+        },
+        "enc_norm": P_((cfg.d_model,), ("embed",), init="ones"),
+        "dec": {
+            "ln1": P_((Ld, cfg.d_model), ("layers", "embed"), init="ones"),
+            "ln_x": P_((Ld, cfg.d_model), ("layers", "embed"), init="ones"),
+            "ln2": P_((Ld, cfg.d_model), ("layers", "embed"), init="ones"),
+            "attn": att.attn_specs(cfg, Ld),
+            "xattn": att.attn_specs(cfg, Ld),
+            "mlp": mlp_specs(cfg, Ld),
+        },
+        "final_norm": P_((cfg.d_model,), ("embed",), init="ones"),
+        "head": P_((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def encode(params, cfg: Config, mesh, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T, D) stub embeddings -> encoder output (B, T, D)."""
+    x = frames.astype(cfg.act_dtype)
+    x = constrain(x, mesh, ("batch", None, "act_embed"))
+
+    def body(carry, lp):
+        h = carry + att.attn_apply(rms_norm(carry, lp["ln1"]), lp["attn"],
+                                   cfg, mesh, positions=None, causal=False,
+                                   rope=False)
+        z = rms_norm(h, lp["ln2"])
+        out = h + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        return constrain(out, mesh, ("batch", None, "act_embed")), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_ckpt_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["enc"],
+                        unroll=cfg.layer_unroll)
+    return rms_norm(x, params["enc_norm"])
+
+
+def decode_train(params, cfg: Config, mesh, tokens, enc_out) -> jnp.ndarray:
+    """Teacher-forced decoder -> logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    x = x + params["pos_dec"].astype(x.dtype)[:s][None]
+    x = constrain(x, mesh, ("batch", None, "act_embed"))
+
+    def body(carry, lp):
+        h = carry + att.attn_apply(rms_norm(carry, lp["ln1"]), lp["attn"],
+                                   cfg, mesh, positions=None, causal=True,
+                                   rope=False)
+        mk, mv = att.cross_kv(enc_out, lp["xattn"], cfg)
+        h = h + att.cross_attn_apply(rms_norm(h, lp["ln_x"]), lp["xattn"],
+                                     cfg, mesh, mk, mv)
+        z = rms_norm(h, lp["ln2"])
+        out = h + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        return constrain(out, mesh, ("batch", None, "act_embed")), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_ckpt_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["dec"],
+                        unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+
+
+def loss_fn(params, cfg: Config, mesh, batch) -> jnp.ndarray:
+    enc_out = encode(params, cfg, mesh, batch["frames"])
+    logits = decode_train(params, cfg, mesh, batch["tokens"], enc_out)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache_specs(cfg: Config, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    Ld = cfg.n_layers
+    return {
+        "k": jax.ShapeDtypeStruct((Ld, batch, max_seq, kv, dh), dtype),
+        "v": jax.ShapeDtypeStruct((Ld, batch, max_seq, kv, dh), dtype),
+        "xk": jax.ShapeDtypeStruct((Ld, batch, cfg.enc_frames, kv, dh), dtype),
+        "xv": jax.ShapeDtypeStruct((Ld, batch, cfg.enc_frames, kv, dh), dtype),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: Config):
+    ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax, "xk": ax, "xv": ax, "index": ()}
+
+
+def decode_step(params, cfg: Config, mesh, cache, token, positions=None):
+    """One decoder token with self-KV cache + precomputed cross-KV."""
+    index = cache["index"]
+    x = params["embed"].astype(cfg.act_dtype)[token]
+    zero = jnp.zeros((), index.dtype) if hasattr(index, "dtype") else 0
+    pos_emb = jax.lax.dynamic_slice(params["pos_dec"].astype(x.dtype),
+                                    (index, zero), (1, cfg.d_model))
+    x = x + pos_emb[None]
+
+    def body(carry, lp_kv):
+        lp, ck, cv, xk, xv = lp_kv
+        h_in = rms_norm(carry, lp["ln1"])
+        a_out, nk, nv = att.attn_decode(h_in, lp["attn"], cfg, mesh, ck, cv,
+                                        index, positions=None, rope=False)
+        h = carry + a_out
+        h = h + att.cross_attn_apply(rms_norm(h, lp["ln_x"]), lp["xattn"],
+                                     cfg, mesh, xk.astype(carry.dtype),
+                                     xv.astype(carry.dtype))
+        z = rms_norm(h, lp["ln2"])
+        out = h + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        return out, (nk, nv)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                  cache["xv"]), unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))[:, 0]
+    new_cache = dict(cache)
+    new_cache.update({"k": k_all, "v": v_all, "index": index + 1})
+    return logits, new_cache

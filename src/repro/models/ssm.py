@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) block: chunked scan for train/prefill, O(1)-state decode.
+
+The chunked SSD formulation (intra-chunk masked GEMM + inter-chunk state
+carry) is implemented both as the Pallas kernel (repro.kernels.ssd_scan) and
+as the pure-jnp path here used for lowering; they share the recurrence
+h_t = exp(a_t) h_{t-1} + B_t (x) x_t,  y_t = C_t . h_t.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Config, P_, constrain, rms_norm
+
+
+def ssm_specs(cfg: Config, n_layers: int) -> Dict[str, P_]:
+    d, din = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = din + 2 * g * n
+    L = (n_layers,)
+    return {
+        "wz": P_(L + (d, din), ("layers", "embed", "ssm_inner")),
+        "wx": P_(L + (d, din), ("layers", "embed", "ssm_inner")),
+        "wb": P_(L + (d, g * n), ("layers", "embed", "ssm_bc")),
+        "wc": P_(L + (d, g * n), ("layers", "embed", "ssm_bc")),
+        "wdt": P_(L + (d, h), ("layers", "embed", "ssm_heads")),
+        "dt_bias": P_(L + (h,), ("layers", "ssm_heads"), init="zeros"),
+        "a_log": P_(L + (h,), ("layers", "ssm_heads"), init="zeros"),
+        "d_skip": P_(L + (h,), ("layers", "ssm_heads"), init="ones"),
+        "conv_w": P_(L + (cfg.conv_width, conv_dim), ("layers", "conv", "ssm_inner")),
+        "norm": P_(L + (din,), ("layers", "ssm_inner"), init="ones"),
+        "wo": P_(L + (din, d), ("layers", "ssm_inner", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, L, C), w: (W, C) -> causal depthwise conv via shifted adds."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i if i else None]
+        out = out + shifted * w[width - 1 - i]
+    return out
+
+
+def ssd_chunked(x, b, c, a, chunk: int = 128, return_state: bool = False):
+    """Pure-jnp chunked SSD (matches kernels/ssd_scan semantics).
+
+    x: (B, H, L, P), b/c: (B, H, L, N), a: (B, H, L) log-decay.  Batch and
+    head axes stay UNMERGED so GSPMD keeps batch on 'data' and heads on
+    'model' (merging them forces replication).  Vectorized over chunks with
+    a lax.scan carrying the (N, P) state per series."""
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+    lp = x.shape[2]
+    nc = lp // chunk
+    xc = x.reshape(bsz, h, nc, chunk, p).astype(jnp.float32)
+    bc = b.reshape(bsz, h, nc, chunk, n).astype(jnp.float32)
+    cc = c.reshape(bsz, h, nc, chunk, n).astype(jnp.float32)
+    ac = a.reshape(bsz, h, nc, chunk).astype(jnp.float32)
+    cum = jnp.cumsum(ac, axis=-1)                       # (B, H, NC, C)
+    total = cum[..., -1]                                # (B, H, NC)
+    ii = jnp.arange(chunk)
+    mask = ii[:, None] >= ii[None, :]
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])
+    lmat = jnp.where(mask, decay, 0.0)                  # (B, H, NC, C, C)
+    smat = jnp.einsum("zhcin,zhcjn->zhcij", cc, bc) * lmat
+    y_intra = jnp.einsum("zhcij,zhcjp->zhcip", smat, xc)
+    # chunk -> chunk state recurrence (the only sequential part; tiny body)
+    w_in = jnp.exp(total[..., None] - cum)[..., None] * bc
+    h_chunk = jnp.einsum("zhcjn,zhcjp->zhcnp", w_in, xc)
+
+    def step(hs, inp):
+        h_c, tot = inp                                  # (B,H,N,P), (B,H)
+        h_new = jnp.exp(tot)[..., None, None] * hs + h_c
+        return h_new, hs                                # emit INCOMING state
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_last, h_in = jax.lax.scan(step, h0,
+                                (jnp.moveaxis(h_chunk, 2, 0),
+                                 jnp.moveaxis(total, 2, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 2)                     # (B, H, NC, N, P)
+    y_inter = jnp.einsum("zhcin,zhcnp->zhcip", cc * jnp.exp(cum)[..., None], h_in)
+    y = (y_intra + y_inter).reshape(bsz, h, lp, p)[:, :, :l]
+    if return_state:
+        return y.astype(x.dtype), h_last                # (B, H, N, P)
+    return y.astype(x.dtype)
+
+
+def _split_proj(x, p, cfg: Config):
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    bproj = jnp.einsum("bsd,de->bse", x, p["wb"].astype(x.dtype))
+    cproj = jnp.einsum("bsd,de->bse", x, p["wc"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+    return z, xin, bproj, cproj, dt
+
+
+def ssm_apply(x, p, cfg: Config, mesh, chunk: int = None,
+              return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, D).
+
+    With ``return_state``, also returns the decode cache for this layer:
+    (h_final (B,H,N,P), conv_state (B,W-1,conv_dim)) — the prefill path."""
+    bsz, s, d = x.shape
+    chunk = chunk or cfg.ssm_chunk
+    h, n, g, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    z, xin, bp, cp, dt = _split_proj(x, p, cfg)
+    xbc_raw = jnp.concatenate([xin, bp, cp], axis=-1)
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc_raw,
+                                             p["conv_w"].astype(x.dtype)))
+    xin, bp, cp = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt    # (B, S, H) log-decay
+    xh = xin.reshape(bsz, s, h, pdim)
+    xs = xh * dt[..., None].astype(xh.dtype)
+    per_group = h // g
+    bp = bp.reshape(bsz, s, g, n)
+    cp = cp.reshape(bsz, s, g, n)
+    bg = jnp.repeat(bp, per_group, axis=2)
+    cg = jnp.repeat(cp, per_group, axis=2)
+    # Explicitly head-shard the SSD inputs: the group->head jnp.repeat of
+    # B/C severs GSPMD's sharding propagation and silently replicates every
+    # (B,H,L,*) SSD intermediate over 'model' (measured 10x memory-term
+    # inflation on zamba2/mamba2 — see EXPERIMENTS.md SSPerf).
+    hx = constrain(jnp.moveaxis(xs, 2, 1), mesh,
+                   ("batch", "act_heads", None, None))
+    hb = constrain(jnp.moveaxis(bg, 2, 1), mesh,
+                   ("batch", "act_heads", None, None))
+    hc = constrain(jnp.moveaxis(cg, 2, 1), mesh,
+                   ("batch", "act_heads", None, None))
+    ha = constrain(jnp.moveaxis(a, 2, 1), mesh, ("batch", "act_heads", None))
+    ssd_out = ssd_chunked(hx, hb, hc, ha,
+                          chunk=chunk, return_state=return_state)
+    y, h_final = ssd_out if return_state else (ssd_out, None)
+    y = jnp.moveaxis(y, 1, 2)                             # (B, S, H, P)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    y = constrain(y, mesh, ("batch", None, "act_mlp"))
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    if return_state:
+        w = cfg.conv_width
+        conv_state = xbc_raw[:, -(w - 1):]                # (B, W-1, conv_dim)
+        return out, (h_final, conv_state)
+    return out
+
+
+def ssm_decode(x, p, cfg: Config, mesh, state: Tuple[jnp.ndarray, jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token decode. x: (B, 1, D); state = (h (B,H,N,P), conv (B,W-1,C))."""
+    bsz = x.shape[0]
+    h_state, conv_state = state
+    hh, n, g, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    z, xin, bp, cp, dt = _split_proj(x, p, cfg)
+    xbc = jnp.concatenate([xin, bp, cp], axis=-1)[:, 0]   # (B, C)
+    w = p["conv_w"].astype(x.dtype)
+    width = w.shape[0]
+    hist = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w)
+    new_conv = hist[:, 1:]
+    xbc = jax.nn.silu(conv_out)
+    xin, bp, cp = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt
+    xh = xin.reshape(bsz, hh, pdim)
+    xs = (xh.astype(jnp.float32) * dt[..., None])
+    per_group = hh // g
+    bg = jnp.repeat(bp.reshape(bsz, g, n), per_group, axis=1)  # (B, H, N)
+    cg = jnp.repeat(cp.reshape(bsz, g, n), per_group, axis=1)
+    h_new = jnp.exp(a)[..., None, None] * h_state.astype(jnp.float32) + \
+        jnp.einsum("bhn,bhp->bhnp", bg.astype(jnp.float32), xs)
+    y = jnp.einsum("bhn,bhnp->bhp", cg.astype(jnp.float32), h_new)
+    y = y.astype(x.dtype) + p["d_skip"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return out, (h_new.astype(h_state.dtype), new_conv)

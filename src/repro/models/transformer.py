@@ -1,0 +1,443 @@
+"""Decoder stacks: dense / MoE / SSM / hybrid, with scan-over-layers + remat.
+
+Layer parameters are stacked on a leading ``layers`` axis and consumed by
+``lax.scan``; blocks are wrapped in ``jax.checkpoint`` when cfg.remat.  The
+hybrid (zamba2) stack interleaves a *shared-weight* attention block between
+groups of Mamba2 blocks with a python-level group loop (9 groups), keeping
+the compiled program small while preserving the shared-parameter structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Config, checkpoint_policy as _ckpt_policy, P_, batch_axes, constrain,
+                                 cross_entropy, rms_norm, swiglu)
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: Config, n_layers: int) -> Dict[str, P_]:
+    d, f = cfg.d_model, cfg.d_ff
+    L = (n_layers,)
+    return {
+        "wg": P_(L + (d, f), ("layers", "embed", "mlp")),
+        "wu": P_(L + (d, f), ("layers", "embed", "mlp")),
+        "wd": P_(L + (f, d), ("layers", "mlp", "embed")),
+    }
+
+
+def block_specs(cfg: Config, n_layers: int) -> Dict[str, object]:
+    L = (n_layers,)
+    specs: Dict[str, object] = {
+        "ln1": P_(L + (cfg.d_model,), ("layers", "embed"), init="ones"),
+        "ln2": P_(L + (cfg.d_model,), ("layers", "embed"), init="ones"),
+        "attn": att.attn_specs(cfg, n_layers),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = moe_mod.moe_specs(cfg, n_layers)
+        if cfg.moe_dense_residual:
+            specs["mlp"] = mlp_specs(cfg, n_layers)
+    else:
+        specs["mlp"] = mlp_specs(cfg, n_layers)
+    return specs
+
+
+def lm_specs(cfg: Config) -> Dict[str, object]:
+    specs: Dict[str, object] = {
+        "embed": P_((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": P_((cfg.d_model,), ("embed",), init="ones"),
+        "head": P_((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+    if cfg.family == "ssm":
+        specs["ssm_ln"] = P_((cfg.n_layers, cfg.d_model), ("layers", "embed"),
+                             init="ones")
+        specs["ssm"] = ssm_mod.ssm_specs(cfg, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_group
+        per = cfg.hybrid_group - 1           # mamba blocks per group
+        specs["ssm_ln"] = P_((n_groups, per, cfg.d_model),
+                             ("layers", None, "embed"), init="ones")
+        specs["ssm"] = jax.tree_util.tree_map(
+            lambda s: P_((n_groups,) + s.shape, ("layers",) + s.logical,
+                         init=s.init),
+            ssm_mod.ssm_specs(cfg, per),
+            is_leaf=lambda x: isinstance(x, P_))
+        specs["shared"] = block_specs(
+            dataclassesreplace_dense(cfg), 1)   # one shared attn+mlp block
+    else:
+        specs["layers"] = block_specs(cfg, cfg.n_layers)
+    return specs
+
+
+def dataclassesreplace_dense(cfg: Config) -> Config:
+    import dataclasses
+    return dataclasses.replace(cfg, family="dense")
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _dense_block(x, lp, cfg: Config, mesh, positions):
+    h = x + att.attn_apply(rms_norm(x, lp["ln1"]), lp["attn"], cfg, mesh,
+                           positions)
+    z = rms_norm(h, lp["ln2"])
+    if cfg.family == "moe":
+        m = moe_mod.moe_apply(z, lp["moe"], cfg, mesh)
+        if cfg.moe_dense_residual:
+            m = m + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    else:
+        m = swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    out = h + m
+    return constrain(out, mesh, ("batch", None, "act_embed"))
+
+
+def _stack_forward(x, params, cfg: Config, mesh, positions):
+    """scan the dense/moe decoder blocks over the stacked layer params."""
+    def body(carry, lp):
+        return _dense_block(carry, lp, cfg, mesh, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_ckpt_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.layer_unroll)
+    return x
+
+
+def _ssm_stack_forward(x, params, cfg: Config, mesh):
+    def body(carry, lp):
+        ln, sp = lp
+        out = carry + ssm_mod.ssm_apply(rms_norm(carry, ln), sp, cfg, mesh)
+        return constrain(out, mesh, ("batch", None, "act_embed")), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_ckpt_policy(cfg))
+    x, _ = jax.lax.scan(body, x, (params["ssm_ln"], params["ssm"]),
+                        unroll=cfg.layer_unroll)
+    return x
+
+
+def _hybrid_forward(x, params, cfg: Config, mesh, positions):
+    """Nested scans: outer over groups, inner over the group's mamba blocks;
+    the shared attention block (same weights every group) closes each group.
+    ``cfg.layer_unroll`` unrolls the inner scan, ``cfg.group_unroll`` the
+    outer one (dry-run accounting knobs)."""
+    shared = jax.tree_util.tree_map(lambda a: a[0], params["shared"])
+    dense_cfg = dataclassesreplace_dense(cfg)
+
+    def mamba_body(carry, lp):
+        ln, sp = lp
+        out = carry + ssm_mod.ssm_apply(rms_norm(carry, ln), sp, cfg, mesh)
+        return constrain(out, mesh, ("batch", None, "act_embed")), None
+
+    if cfg.remat:
+        mamba_body = jax.checkpoint(mamba_body,
+                                    policy=_ckpt_policy(cfg))
+
+    def group_body(carry, grp):
+        h, _ = jax.lax.scan(mamba_body, carry, (grp["ssm_ln"], grp["ssm"]),
+                            unroll=cfg.layer_unroll)
+        h = _dense_block(h, shared, dense_cfg, mesh, positions)
+        return h, None
+
+    x, _ = jax.lax.scan(group_body, x,
+                        {"ssm_ln": params["ssm_ln"], "ssm": params["ssm"]},
+                        unroll=cfg.group_unroll)
+    return x
+
+
+def default_positions(cfg: Config, b: int, s: int):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos, (3, b, s))     # text-only M-RoPE default
+    return pos
+
+
+def forward(params, cfg: Config, mesh, tokens, positions=None,
+            embeddings: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, V)."""
+    if embeddings is None:
+        x = params["embed"].astype(cfg.act_dtype)[tokens]
+    else:
+        x = embeddings.astype(cfg.act_dtype)
+    x = constrain(x, mesh, ("batch", None, "act_embed"))
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    if cfg.family == "ssm":
+        x = _ssm_stack_forward(x, params, cfg, mesh)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(x, params, cfg, mesh, positions)
+    else:
+        x = _stack_forward(x, params, cfg, mesh, positions)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    return constrain(logits, mesh, ("batch", None, "vocab"))
+
+
+def loss_fn(params, cfg: Config, mesh, batch) -> jnp.ndarray:
+    logits = forward(params, cfg, mesh, batch["tokens"],
+                     positions=batch.get("positions"),
+                     embeddings=batch.get("embeddings"))
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) and prefill
+# ---------------------------------------------------------------------------
+
+def init_cache_specs(cfg: Config, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode cache (also used to allocate)."""
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.family == "ssm":
+        return {
+            "ssm_h": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                 cfg.ssm_head_dim), jnp.float32),
+            "ssm_conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.conv_width - 1,
+                 cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state), dtype),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_group
+        per = cfg.hybrid_group - 1
+        return {
+            "ssm_h": jax.ShapeDtypeStruct(
+                (n_groups, per, batch, cfg.ssm_heads, cfg.ssm_state,
+                 cfg.ssm_head_dim), jnp.float32),
+            "ssm_conv": jax.ShapeDtypeStruct(
+                (n_groups, per, batch, cfg.conv_width - 1,
+                 cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state), dtype),
+            "k": jax.ShapeDtypeStruct((n_groups, batch, max_seq, kv, dh), dtype),
+            "v": jax.ShapeDtypeStruct((n_groups, batch, max_seq, kv, dh), dtype),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.n_layers, batch, max_seq, kv, dh), dtype),
+        "v": jax.ShapeDtypeStruct((cfg.n_layers, batch, max_seq, kv, dh), dtype),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: Config):
+    kv_axis = "kv_heads"
+    base = {
+        "k": ("layers", "batch", "kv_seq", kv_axis, "head_dim"),
+        "v": ("layers", "batch", "kv_seq", kv_axis, "head_dim"),
+        "index": (),
+    }
+    if cfg.family == "ssm":
+        return {
+            "ssm_h": ("layers", "batch", "ssm_heads", "ssm_state", None),
+            "ssm_conv": ("layers", "batch", None, "ssm_inner"),
+            "index": (),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ssm_h": ("layers", None, "batch", "ssm_heads", "ssm_state", None),
+            "ssm_conv": ("layers", None, "batch", None, "ssm_inner"),
+            "k": ("layers", "batch", "kv_seq", kv_axis, "head_dim"),
+            "v": ("layers", "batch", "kv_seq", kv_axis, "head_dim"),
+            "index": (),
+        }
+    return base
+
+
+def decode_step(params, cfg: Config, mesh, cache, token, positions=None):
+    """One decode step: token (B, 1) -> (logits (B, V), new cache)."""
+    x = params["embed"].astype(cfg.act_dtype)[token]     # (B, 1, D)
+    index = cache["index"]
+    b = token.shape[0]
+    if positions is None:
+        positions = jnp.broadcast_to(index, (b, 1)).astype(jnp.int32)
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions, (3, b, 1))
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            x_c = carry
+            ln, sp, h_st, conv_st = lp
+            out, (h_new, conv_new) = ssm_mod.ssm_decode(
+                rms_norm(x_c, ln), sp, cfg, mesh, (h_st, conv_st))
+            return x_c + out, (h_new, conv_new)
+
+        x, (h_all, conv_all) = jax.lax.scan(
+            body, x, (params["ssm_ln"], params["ssm"],
+                      cache["ssm_h"], cache["ssm_conv"]),
+            unroll=cfg.layer_unroll)
+        new_cache = {"ssm_h": h_all, "ssm_conv": conv_all, "index": index + 1}
+    elif cfg.family == "hybrid":
+        shared = jax.tree_util.tree_map(lambda a: a[0], params["shared"])
+        dense_cfg = dataclassesreplace_dense(cfg)
+
+        def mamba_body(carry, lp):
+            ln, sp, h_st, conv_st = lp
+            out, (h_new, conv_new) = ssm_mod.ssm_decode(
+                rms_norm(carry, ln), sp, cfg, mesh, (h_st, conv_st))
+            return carry + out, (h_new, conv_new)
+
+        def group_body(carry, grp):
+            h, (h_g, c_g) = jax.lax.scan(
+                mamba_body, carry,
+                (grp["ln"], grp["ssm"], grp["h"], grp["conv"]),
+                unroll=cfg.layer_unroll)
+            h, nk, nv = _attn_block_decode(h, shared, dense_cfg, mesh,
+                                           grp["k"], grp["v"], index,
+                                           positions)
+            return h, (h_g, c_g, nk, nv)
+
+        x, (h_all, conv_all, k_all, v_all) = jax.lax.scan(
+            group_body, x,
+            {"ln": params["ssm_ln"], "ssm": params["ssm"],
+             "h": cache["ssm_h"], "conv": cache["ssm_conv"],
+             "k": cache["k"], "v": cache["v"]},
+            unroll=cfg.group_unroll)
+        new_cache = {
+            "ssm_h": h_all, "ssm_conv": conv_all,
+            "k": k_all, "v": v_all, "index": index + 1,
+        }
+    else:
+        def body(carry, lp_kv):
+            lp, ck, cv = lp_kv
+            out, nk, nv = _attn_block_decode(carry, lp, cfg, mesh, ck, cv,
+                                             index, positions)
+            return out, (nk, nv)
+
+        x, (k_all, v_all) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]),
+            unroll=cfg.layer_unroll)
+        new_cache = {"k": k_all, "v": v_all, "index": index + 1}
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))[:, 0]
+    return logits, new_cache
+
+
+def _attn_block_decode(x, lp, cfg: Config, mesh, ck, cv, index, positions):
+    h_in = rms_norm(x, lp["ln1"])
+    a_out, nk, nv = att.attn_decode(h_in, lp["attn"], cfg, mesh, ck, cv, index,
+                                    positions)
+    h = x + a_out
+    z = rms_norm(h, lp["ln2"])
+    if cfg.family == "moe":
+        m = moe_mod.moe_apply(z, lp["moe"], cfg, mesh)
+        if cfg.moe_dense_residual:
+            m = m + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    else:
+        m = swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    return h + m, nk, nv
+
+
+def prefill(params, cfg: Config, mesh, tokens, max_seq: int,
+            positions=None, cache_dtype=jnp.bfloat16):
+    """Prefill the decode cache from a full prompt (all LM families)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return _prefill_recurrent(params, cfg, mesh, tokens, max_seq,
+                                  positions, cache_dtype)
+    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    x = constrain(x, mesh, ("batch", None, "act_embed"))
+    b, s = tokens.shape
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+
+    def body(carry, lp):
+        h_in = rms_norm(carry, lp["ln1"])
+        a_out, (k, v) = att.attn_prefill(h_in, lp["attn"], cfg, mesh, positions)
+        h = carry + a_out
+        z = rms_norm(h, lp["ln2"])
+        if cfg.family == "moe":
+            m = moe_mod.moe_apply(z, lp["moe"], cfg, mesh)
+            if cfg.moe_dense_residual:
+                m = m + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        else:
+            m = swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        out = constrain(h + m, mesh, ("batch", None, "act_embed"))
+        pad = max_seq - s
+        k = jnp.pad(k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return out, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_ckpt_policy(cfg))
+    x, (k_all, v_all) = jax.lax.scan(body, x, params["layers"],
+                                     unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["head"].astype(x.dtype))
+    cache = {"k": k_all, "v": v_all, "index": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def _prefill_recurrent(params, cfg: Config, mesh, tokens, max_seq: int,
+                       positions=None, cache_dtype=jnp.bfloat16):
+    """SSM/hybrid prefill: full-sequence forward that also emits the decode
+    states (final SSD state + conv tail per layer; KV for shared attn)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    x = constrain(x, mesh, ("batch", None, "act_embed"))
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    index = jnp.asarray(s, jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            ln, sp = lp
+            out, st = ssm_mod.ssm_apply(rms_norm(carry, ln), sp, cfg, mesh,
+                                        return_state=True)
+            new = constrain(carry + out, mesh, ("batch", None, "act_embed"))
+            return new, st
+
+        x, (h_all, conv_all) = jax.lax.scan(
+            body, x, (params["ssm_ln"], params["ssm"]),
+            unroll=cfg.layer_unroll)
+        cache = {"ssm_h": h_all, "ssm_conv": conv_all.astype(cache_dtype),
+                 "index": index}
+    else:
+        shared = jax.tree_util.tree_map(lambda a: a[0], params["shared"])
+        dense_cfg = dataclassesreplace_dense(cfg)
+
+        def mamba_body(carry, lp):
+            ln, sp = lp
+            out, st = ssm_mod.ssm_apply(rms_norm(carry, ln), sp, cfg, mesh,
+                                        return_state=True)
+            new = constrain(carry + out, mesh, ("batch", None, "act_embed"))
+            return new, st
+
+        def group_body(carry, grp):
+            h, (h_g, c_g) = jax.lax.scan(
+                mamba_body, carry, (grp["ssm_ln"], grp["ssm"]),
+                unroll=cfg.layer_unroll)
+            a_out, (k, v) = att.attn_prefill(rms_norm(h, shared["ln1"]),
+                                             shared["attn"], dense_cfg, mesh,
+                                             positions)
+            h2 = h + a_out
+            z = rms_norm(h2, shared["ln2"])
+            h2 = h2 + swiglu(z, shared["mlp"]["wg"], shared["mlp"]["wu"],
+                             shared["mlp"]["wd"])
+            h2 = constrain(h2, mesh, ("batch", None, "act_embed"))
+            pad = max_seq - s
+            k = jnp.pad(k.astype(cache_dtype),
+                        ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v.astype(cache_dtype),
+                        ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h2, (h_g, c_g, k, v)
+
+        x, (h_all, conv_all, k_all, v_all) = jax.lax.scan(
+            group_body, x,
+            {"ssm_ln": params["ssm_ln"], "ssm": params["ssm"]},
+            unroll=cfg.group_unroll)
+        cache = {"ssm_h": h_all, "ssm_conv": conv_all.astype(cache_dtype),
+                 "k": k_all, "v": v_all, "index": index}
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["head"].astype(x.dtype))
+    return logits, cache

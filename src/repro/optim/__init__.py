@@ -1,0 +1,3 @@
+"""Optimizers and distributed-optimization utilities."""
+from repro.optim.adamw import adamw_init, adamw_update, OptConfig  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401

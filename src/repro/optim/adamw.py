@@ -1,0 +1,72 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer moments are stored in float32 and sharded exactly like their
+parameters (ZeRO-style: the FSDP rules in models/common.py shard the embed
+axis over ``data``, so moments are fully distributed too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+          for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))
+
+
+def adamw_update(grads, state, params, cfg: OptConfig, lr=None):
+    """Returns (new_params, new_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        step = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (step + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        a, b, c = upd(g, m, v, p)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"mu": jax.tree_util.tree_unflatten(treedef, new_m),
+             "nu": jax.tree_util.tree_unflatten(treedef, new_v),
+             "count": count},
+            {"grad_norm": gnorm})

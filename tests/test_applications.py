@@ -1,0 +1,85 @@
+"""ITE / VQE / RQC application drivers (paper Section VI-B/VI-D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import peps as P
+from repro.core import statevector as sv
+from repro.core import bmps as B
+from repro.core.observable import tfi_hamiltonian, j1j2_hamiltonian
+from repro.core.circuits import (random_circuit, vqe_ansatz,
+                                 apply_circuit_exact_peps,
+                                 apply_circuit_peps,
+                                 apply_circuit_statevector)
+from repro.core.ite import ite_run, ite_statevector, trotter_moments
+from repro.core.peps import QRUpdate, DirectUpdate
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+from repro.core.vqe import vqe_energy_peps, vqe_energy_statevector
+
+
+def test_rqc_exact_evolution_matches_statevector():
+    circ = random_circuit(3, 3, 8, seed=1)
+    state = apply_circuit_exact_peps(P.computational_zeros(3, 3), circ)
+    vec = apply_circuit_statevector(sv.zeros(9), circ)
+    assert state.max_bond() == 16  # 2 iSWAP rounds: 4^2
+    bits = np.zeros((3, 3), dtype=int)
+    amp = complex(P.amplitude_exact(state, bits))
+    assert abs(amp - complex(vec[(0,) * 9])) < 1e-12
+
+
+def test_rqc_bmps_ibmps_amplitude():
+    circ = random_circuit(3, 3, 8, seed=2)
+    state = apply_circuit_exact_peps(P.computational_zeros(3, 3), circ)
+    vec = apply_circuit_statevector(sv.zeros(9), circ)
+    want = complex(vec[(0,) * 9])
+    for svd in (DirectSVD(), RandomizedSVD(niter=4)):
+        got = complex(B.amplitude(state, np.zeros((3, 3), int), B.BMPS(16, svd)))
+        assert abs(got - want) / abs(want) < 1e-6
+
+
+def test_trotter_moment_count():
+    obs = tfi_hamiltonian(3, 3)
+    moments = trotter_moments(obs, 0.05)
+    # 12 ZZ bonds + 9 X fields
+    assert len(moments) == 21
+
+
+def test_ite_decreases_energy():
+    obs = tfi_hamiltonian(2, 2, jz=-1.0, hx=-3.5)
+    res = ite_run(P.computational_zeros(2, 2), obs, tau=0.05, steps=40,
+                  update=QRUpdate(rank=4), contract=B.BMPS(8), measure_every=10)
+    assert res.energies[-1] < res.energies[0]
+
+
+def test_ite_converges_to_statevector_ite():
+    obs = tfi_hamiltonian(2, 2, jz=-1.0, hx=-3.5)
+    _, e_ref = ite_statevector(2, 2, obs, tau=0.05, steps=200)
+    res = ite_run(P.computational_zeros(2, 2), obs, tau=0.05, steps=200,
+                  update=QRUpdate(rank=4), contract=B.BMPS(8), measure_every=200)
+    assert abs(res.energies[-1] - e_ref) < 5e-2 * abs(e_ref)
+
+
+def test_vqe_energy_peps_matches_statevector():
+    obs = tfi_hamiltonian(2, 2)
+    rng = np.random.default_rng(0)
+    thetas = rng.uniform(-0.5, 0.5, size=8)  # 2 layers x 4 qubits
+    e_sv = vqe_energy_statevector(thetas, 2, 2, obs)
+    e_peps = vqe_energy_peps(thetas, 2, 2, obs, QRUpdate(rank=4), B.BMPS(16))
+    assert abs(e_sv - e_peps) < 1e-8 * max(1.0, abs(e_sv))
+
+
+def test_vqe_ansatz_structure():
+    thetas = np.zeros(18)  # 2 layers x 9 qubits
+    circ = vqe_ansatz(3, 3, thetas)
+    n_ry = sum(1 for g, s in circ if len(s) == 1)
+    n_cx = sum(1 for g, s in circ if len(s) == 2)
+    assert n_ry == 18 and n_cx == 24  # 12 nn pairs x 2 layers
+
+
+def test_j1j2_ite_smoke():
+    """One ITE step of the J1-J2 model (has diagonal terms -> SWAP chains)."""
+    obs = j1j2_hamiltonian(2, 2)
+    res = ite_run(P.computational_zeros(2, 2), obs, tau=0.02, steps=2,
+                  update=QRUpdate(rank=4), contract=B.BMPS(8), measure_every=2)
+    assert np.isfinite(res.energies[-1])

@@ -1,0 +1,77 @@
+"""BMPS / IBMPS / two-layer contraction tests (paper Alg. 2/3, Table II)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import peps as P
+from repro.core import bmps as B
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+
+
+@pytest.fixture(scope="module")
+def onelayer():
+    return P.random_onelayer(4, 4, 3, jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def state33():
+    return P.random_peps(3, 3, 2, jax.random.PRNGKey(7))
+
+
+def test_onelayer_bmps_converges(onelayer):
+    exact = complex(B.contract_exact_onelayer(onelayer))
+    v = complex(B.contract_onelayer(onelayer, B.BMPS(16, DirectSVD())))
+    assert abs(v - exact) / abs(exact) < 1e-10
+
+
+def test_onelayer_ibmps_no_extra_error(onelayer):
+    """Fig. 10 claim: implicit randomized SVD adds no error over direct SVD."""
+    exact = complex(B.contract_exact_onelayer(onelayer))
+    for chi in (3, 6, 16):
+        e_b = abs(complex(B.contract_onelayer(onelayer, B.BMPS(chi, DirectSVD()))) - exact)
+        e_i = abs(complex(B.contract_onelayer(onelayer, B.BMPS(chi, RandomizedSVD(niter=4)))) - exact)
+        assert e_i <= e_b * 1.5 + 1e-12 * abs(exact)
+
+
+def test_twolayer_matches_statevector(state33):
+    vec = P.to_statevector(state33)
+    want = float(jnp.real(jnp.vdot(vec, vec)))
+    got_d = complex(B.norm_squared(state33, B.BMPS(16, DirectSVD())))
+    got_r = complex(B.norm_squared(state33, B.BMPS(16, RandomizedSVD())))
+    assert abs(got_d - want) < 1e-10 * abs(want)
+    assert abs(got_r - want) < 1e-8 * abs(want)
+
+
+def test_twolayer_equals_merged_onelayer(state33):
+    merged = B.merge_layers(state33.sites, state33.sites)
+    v1 = complex(B.contract_exact_onelayer(merged))
+    v2 = complex(B.contract_twolayer(state33.sites, state33.sites,
+                                     B.BMPS(16, DirectSVD())))
+    assert abs(v1 - v2) < 1e-10 * abs(v1)
+
+
+def test_inner_product_hermitian(state33):
+    other = P.random_peps(3, 3, 2, jax.random.PRNGKey(8))
+    opt = B.BMPS(16, DirectSVD())
+    ab = complex(B.inner(state33, other, opt))
+    ba = complex(B.inner(other, state33, opt))
+    assert abs(ab - np.conj(ba)) < 1e-10 * max(abs(ab), 1e-30)
+
+
+def test_amplitude_approx_matches_exact(state33):
+    bits = np.array([[0, 1, 0], [1, 0, 1], [0, 0, 1]])
+    want = complex(P.amplitude_exact(state33, bits))
+    got = complex(B.amplitude(state33, bits, B.BMPS(8, DirectSVD())))
+    assert abs(got - want) < 1e-10 * abs(want)
+
+
+def test_truncation_monotone(onelayer):
+    """Property: error is (weakly) improving with chi on this network."""
+    exact = complex(B.contract_exact_onelayer(onelayer))
+    errs = []
+    for chi in (2, 4, 8, 16):
+        v = complex(B.contract_onelayer(onelayer, B.BMPS(chi, DirectSVD())))
+        errs.append(abs(v - exact) / abs(exact))
+    assert errs[-1] < 1e-9
+    assert errs[-1] <= errs[0] + 1e-12

@@ -1,0 +1,118 @@
+"""einsumsvd / randomized SVD / Gram orthogonalization unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD, einsumsvd, truncation_error
+from repro.core.orthogonalize import gram_qr, reshape_qr, orthogonalize_cols
+from repro.core.rsvd import ImplicitOperator, randomized_svd
+
+
+def _random_network(key, d1=3, d2=4, d3=5, d4=3, dtype=jnp.complex128):
+    k1, k2 = jax.random.split(key)
+
+    def rnd(k, shape):
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+            ka, kb = jax.random.split(k)
+            return (jax.random.normal(ka, shape) + 1j * jax.random.normal(kb, shape)).astype(dtype)
+        return jax.random.normal(k, shape).astype(dtype)
+
+    a = rnd(k1, (d1, d2, d3))
+    b = rnd(k2, (d3, d4, d1))
+    # network: contract over label c (=d3); operator rows 'ab', cols 'de'
+    return [a, b], ["abc", "cde"], "ab", "de"
+
+
+def test_implicit_operator_dense_matvec_consistency():
+    tensors, subs, row, col = _random_network(jax.random.PRNGKey(0))
+    op = ImplicitOperator(tensors, subs, row, col)
+    dense = op.dense()
+    q = jax.random.normal(jax.random.PRNGKey(1), op.col_shape + (3,))
+    q = q.astype(op.dtype)
+    got = op.matvecs(q)
+    want = jnp.tensordot(dense, q, axes=[[2, 3], [0, 1]])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-12)
+    p = jax.random.normal(jax.random.PRNGKey(2), op.row_shape + (3,)).astype(op.dtype)
+    got_r = op.rmatvecs(p)
+    mat = dense.reshape(op.row_size, op.col_size)
+    want_r = (mat.conj().T @ p.reshape(op.row_size, 3)).reshape(op.col_shape + (3,))
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want_r), atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.complex128])
+def test_randomized_svd_matches_direct(dtype):
+    tensors, subs, row, col = _random_network(jax.random.PRNGKey(3), dtype=dtype)
+    op = ImplicitOperator(tensors, subs, row, col)
+    rank = min(op.row_size, op.col_size)  # full rank -> exact
+    u1, s1, v1 = DirectSVD()(op, rank)
+    u2, s2, v2 = RandomizedSVD(niter=6)(op, rank, key=jax.random.PRNGKey(9))
+    s1, s2 = np.asarray(s1), np.asarray(s2)
+    # compare significant singular values only: the gram_final variant floors
+    # null-space values at the Gram eps (sqrt(1e-13)*s0) instead of ~1e-16
+    sig = s1 > 1e-8 * s1[0]
+    np.testing.assert_allclose(s1[sig], s2[sig], rtol=1e-8)
+    assert np.all(s2[~sig] < 1e-5 * s1[0])
+    assert float(truncation_error(op.dense(), u2, s2, v2)) < 1e-8
+
+
+def test_truncated_rsvd_error_near_optimal():
+    tensors, subs, row, col = _random_network(jax.random.PRNGKey(4))
+    op = ImplicitOperator(tensors, subs, row, col)
+    for rank in (2, 4, 6):
+        ud, sd, vd = DirectSVD()(op, rank)
+        ur, sr, vr = RandomizedSVD(niter=8, oversample=8)(op, rank,
+                                                          key=jax.random.PRNGKey(1))
+        e_direct = float(truncation_error(op.dense(), ud, sd, vd))
+        e_rand = float(truncation_error(op.dense(), ur, sr, vr))
+        # paper Fig. 10 claim: implicit rSVD adds no significant extra error
+        assert e_rand <= e_direct * 1.05 + 1e-10
+
+
+def test_einsumsvd_absorb_modes():
+    tensors, subs, row, col = _random_network(jax.random.PRNGKey(5))
+    rank = 4
+    u, s, v = einsumsvd(DirectSVD(), tensors, subs, row, col, rank, absorb="none")
+    l_both, r_both = einsumsvd(DirectSVD(), tensors, subs, row, col, rank, absorb="both")
+    recon1 = jnp.einsum("abk,k,kde->abde", u, s, v)
+    recon2 = jnp.einsum("abk,kde->abde", l_both, r_both)
+    np.testing.assert_allclose(np.asarray(recon1), np.asarray(recon2), atol=1e-12)
+
+
+@settings(deadline=None, max_examples=20)
+@given(m=st.integers(2, 9), n=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_gram_qr_property(m, n, seed):
+    """Property: gram_qr reconstructs A and produces an isometry (tall case)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = (jax.random.normal(k1, (m, m, n)) + 1j * jax.random.normal(k2, (m, m, n)))
+    q, r = gram_qr(a, 1)
+    recon = jnp.tensordot(q, r, axes=[[2], [0]])
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(a), atol=1e-9)
+    if m * m >= n:
+        qtq = jnp.tensordot(q.conj(), q, axes=[[0, 1], [0, 1]])
+        np.testing.assert_allclose(np.asarray(qtq), np.eye(n), atol=1e-8)
+
+
+def test_gram_qr_matches_reshape_qr_subspace():
+    a = jax.random.normal(jax.random.PRNGKey(0), (7, 3, 4)).astype(jnp.float64)
+    for qr in (gram_qr, reshape_qr):
+        q, r = qr(a, 2)
+        recon = jnp.tensordot(q, r, axes=[[1, 2], [0, 1]])
+        np.testing.assert_allclose(np.asarray(recon), np.asarray(a), atol=1e-10)
+
+
+def test_gram_qr_rank_deficient():
+    """Wide/rank-deficient case: reconstruction must still be exact."""
+    a = jnp.zeros((2, 3, 4), dtype=jnp.complex128).at[0, 1, 2].set(1.0)
+    q, r = gram_qr(a, 2)
+    recon = jnp.tensordot(q, r, axes=[[1, 2], [0, 1]])
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(a), atol=1e-9)
+
+
+def test_orthogonalize_cols():
+    t = jax.random.normal(jax.random.PRNGKey(1), (6, 5, 3)).astype(jnp.float64)
+    q = orthogonalize_cols(t)
+    qtq = jnp.tensordot(q, q, axes=[[0, 1], [0, 1]])
+    np.testing.assert_allclose(np.asarray(qtq), np.eye(3), atol=1e-10)

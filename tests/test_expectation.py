@@ -1,0 +1,82 @@
+"""Expectation values with/without caching vs the statevector oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import peps as P
+from repro.core import statevector as sv
+from repro.core import bmps as B
+from repro.core.observable import Observable, tfi_hamiltonian, j1j2_hamiltonian
+from repro.core.expectation import expectation, split_two_site, norm_from_envs
+from repro.core.environments import row_environments
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+
+
+@pytest.fixture(scope="module")
+def state():
+    return P.random_peps(3, 3, 2, jax.random.PRNGKey(3))
+
+
+@pytest.fixture(scope="module")
+def vec(state):
+    return P.to_statevector(state)
+
+
+OPT = B.BMPS(16, DirectSVD())
+
+
+@pytest.mark.parametrize("obs_fn", [
+    lambda: Observable.Z(0),
+    lambda: Observable.X(4),
+    lambda: Observable.ZZ(0, 1),
+    lambda: Observable.ZZ(3, 4),
+    lambda: Observable.ZZ(1, 4),
+    lambda: Observable.XX(0, 4),   # diagonal
+    lambda: Observable.YY(1, 3),   # anti-diagonal
+    lambda: Observable.ZZ(4, 8),   # diagonal rows 1-2
+])
+def test_single_terms(state, vec, obs_fn):
+    obs = obs_fn()
+    want = complex(sv.expectation(vec, obs.as_tuples()))
+    got = complex(expectation(state, obs, OPT, use_cache=True))
+    assert abs(got - want) < 1e-10
+
+
+@pytest.mark.parametrize("ham", ["tfi", "j1j2"])
+@pytest.mark.parametrize("use_cache", [True, False])
+def test_hamiltonians(state, vec, ham, use_cache):
+    obs = tfi_hamiltonian(3, 3) if ham == "tfi" else j1j2_hamiltonian(3, 3)
+    want = complex(sv.expectation(vec, obs.as_tuples()))
+    got = complex(expectation(state, obs, OPT, use_cache=use_cache))
+    assert abs(got - want) < 1e-9
+
+
+def test_cache_equals_nocache(state):
+    obs = tfi_hamiltonian(3, 3)
+    a = complex(expectation(state, obs, OPT, use_cache=True))
+    b = complex(expectation(state, obs, OPT, use_cache=False))
+    assert abs(a - b) < 1e-10
+
+
+def test_rsvd_contraction_expectation(state, vec):
+    obs = tfi_hamiltonian(3, 3)
+    want = complex(sv.expectation(vec, obs.as_tuples()))
+    got = complex(expectation(state, obs, B.BMPS(16, RandomizedSVD()), use_cache=True))
+    assert abs(got - want) < 1e-7
+
+
+def test_split_two_site_exact():
+    from repro.core import gates as G
+    for g in (G.CX, G.ISWAP, G.two_site_gate(np.kron(G.Z, G.Z))):
+        left, right = split_two_site(g)
+        recon = np.einsum("xpk,yqk->xypq", left, right)
+        np.testing.assert_allclose(recon, np.asarray(g).reshape(2, 2, 2, 2),
+                                   atol=1e-12)
+
+
+def test_norm_from_envs(state, vec):
+    top, bottom = row_environments(state, OPT)
+    got = complex(norm_from_envs(state, top, bottom))
+    want = float(jnp.real(jnp.vdot(vec, vec)))
+    assert abs(got - want) < 1e-10 * abs(want)

@@ -1,0 +1,138 @@
+"""Per-kernel interpret-mode allclose sweeps vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gram import gram, gram_complex
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.tiled_matmul import tiled_matmul
+
+
+def _rnd(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 512),
+                                   (100, 70, 130), (1, 128, 5), (257, 129, 31)])
+def test_tiled_matmul_sweep(shape, dtype):
+    m, k, n = shape
+    a = _rnd(jax.random.PRNGKey(0), (m, k), dtype)
+    b = _rnd(jax.random.PRNGKey(1), (k, n), dtype)
+    got = tiled_matmul(a, b, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * k ** 0.5)
+
+
+@settings(deadline=None, max_examples=12)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+       seed=st.integers(0, 1000))
+def test_tiled_matmul_property(m, k, n, seed):
+    a = _rnd(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+    b = _rnd(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+    got = tiled_matmul(a, b, bm=64, bn=64, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------------ gram ----
+@pytest.mark.parametrize("shape", [(512, 64), (1000, 30), (64, 128), (37, 5)])
+def test_gram_sweep(shape):
+    a = _rnd(jax.random.PRNGKey(2), shape, jnp.float32)
+    got = gram(a, bm=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.gram(a)),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_gram_complex():
+    key = jax.random.PRNGKey(3)
+    a = (jax.random.normal(key, (300, 20)) +
+         1j * jax.random.normal(jax.random.PRNGKey(4), (300, 20)))
+    a = a.astype(jnp.complex64)
+    got = gram_complex(a, interpret=True)
+    want = ref.gram_complex(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_gram_feeds_orthogonalization():
+    """The kernel's G supports the Alg. 5 eigh-based isometry construction."""
+    a = _rnd(jax.random.PRNGKey(5), (512, 32), jnp.float32)
+    g = np.asarray(gram(a, interpret=True), np.float64)
+    lam, x = np.linalg.eigh(g)
+    lam = np.maximum(lam, 1e-10)
+    q = np.asarray(a, np.float64) @ (x / np.sqrt(lam))
+    np.testing.assert_allclose(q.T @ q, np.eye(32), atol=1e-3)
+
+
+# ------------------------------------------------------------- attention ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 128, 64),     # MHA, aligned
+    (2, 8, 2, 256, 64),     # GQA 4:1
+    (1, 5, 5, 96, 32),      # odd heads, unaligned seq
+    (1, 8, 1, 130, 64),     # MQA, unaligned seq
+])
+def test_flash_attention_sweep(b, hq, hkv, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rnd(ks[0], (b, hq, s, d), dtype)
+    k = _rnd(ks[1], (b, hkv, s, d), dtype)
+    v = _rnd(ks[2], (b, hkv, s, d), dtype)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal_padded():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = _rnd(ks[0], (1, 2, 100, 32), jnp.float32)
+    k = _rnd(ks[1], (1, 2, 75, 32), jnp.float32)   # cross-attn, padded keys
+    v = _rnd(ks[2], (1, 2, 75, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    want = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------- ssd ----
+@pytest.mark.parametrize("bh,l,p,n,chunk", [
+    (2, 256, 64, 64, 64),
+    (1, 100, 32, 16, 32),    # unaligned length
+    (3, 64, 64, 128, 64),
+])
+def test_ssd_scan_sweep(bh, l, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    x = _rnd(ks[0], (bh, l, p), jnp.float32)
+    b = _rnd(ks[1], (bh, l, n), jnp.float32) * 0.5
+    c = _rnd(ks[2], (bh, l, n), jnp.float32) * 0.5
+    a = -jnp.abs(_rnd(ks[3], (bh, l), jnp.float32)) * 0.1  # log-decay <= 0
+    got = ssd_scan(x, b, c, a, chunk=chunk, interpret=True)
+    want = ref.ssd(x, b, c, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_matches_attention_limit():
+    """With a == 0 (no decay) SSD equals unnormalized linear attention."""
+    bh, l, p, n = 1, 64, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    x = _rnd(ks[0], (bh, l, p), jnp.float32)
+    b = _rnd(ks[1], (bh, l, n), jnp.float32)
+    c = _rnd(ks[2], (bh, l, n), jnp.float32)
+    a = jnp.zeros((bh, l), jnp.float32)
+    got = ssd_scan(x, b, c, a, chunk=32, interpret=True)
+    mask = jnp.tril(jnp.ones((l, l)))
+    want = jnp.einsum("bik,bjk,ij,bjp->bip", c, b, mask, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)

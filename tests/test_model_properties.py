@@ -1,0 +1,130 @@
+"""Property tests on model-component invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import (apply_mrope, apply_rope, cross_entropy,
+                                 rms_norm)
+from repro.models.ssm import ssd_chunked
+from repro.kernels import ref
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), shift=st.integers(0, 50))
+def test_rope_relative_position_invariance(seed, shift):
+    """RoPE dot products depend only on relative positions: shifting all
+    positions by a constant leaves q.k scores unchanged."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    q = jax.random.normal(k1, (1, 8, 2, 32))
+    k = jax.random.normal(k2, (1, 8, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    def scores(p):
+        qr = apply_rope(q, p)
+        kr = apply_rope(k, p)
+        return jnp.einsum("bshd,bthd->bhst", qr, kr)
+    s0 = scores(pos)
+    s1 = scores(pos + shift)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """With identical position streams, M-RoPE == standard RoPE."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(6), (1, 6))
+    pos3 = jnp.broadcast_to(pos, (3, 1, 6))
+    a = apply_rope(q, pos, theta=1e4)
+    b = apply_mrope(q, pos3, sections=(3, 3, 2), theta=1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rms_norm_unit_rms(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 10
+    y = rms_norm(x, jnp.ones(64))
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-2)
+
+
+def test_rms_norm_scale_equivariance():
+    """rms_norm(c*x) == rms_norm(x) for any positive scalar c."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    a = rms_norm(x, jnp.ones(32))
+    b = rms_norm(123.0 * x, jnp.ones(32))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_cross_entropy_uniform_logits():
+    logits = jnp.zeros((2, 3, 7))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    got = float(cross_entropy(logits, labels))
+    assert abs(got - np.log(7)) < 1e-5
+
+
+def test_cross_entropy_perfect_prediction():
+    labels = jnp.array([[1, 2]], jnp.int32)
+    logits = jax.nn.one_hot(labels, 5) * 100.0
+    assert float(cross_entropy(logits, labels)) < 1e-3
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([16, 32, 64]))
+def test_ssd_chunk_invariance(seed, chunk):
+    """The chunked SSD result must not depend on the chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    b, h, l, p, n = 1, 2, 96, 8, 4
+    x = jax.random.normal(ks[0], (b, h, l, p))
+    bb = jax.random.normal(ks[1], (b, h, l, n)) * 0.5
+    cc = jax.random.normal(ks[2], (b, h, l, n)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[3], (b, h, l))) * 0.1
+    y1 = ssd_chunked(x, bb, cc, a, chunk=chunk)
+    y2 = ssd_chunked(x, bb, cc, a, chunk=l)  # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_matches_kernel_ref():
+    """jnp chunked SSD == the naive-recurrence kernel oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    b, h, l, p, n = 2, 3, 64, 8, 4
+    x = jax.random.normal(ks[0], (b, h, l, p))
+    bb = jax.random.normal(ks[1], (b, h, l, n)) * 0.5
+    cc = jax.random.normal(ks[2], (b, h, l, n)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[3], (b, h, l))) * 0.1
+    got = ssd_chunked(x, bb, cc, a, chunk=16)
+    want = ref.ssd(x.reshape(b * h, l, p), bb.reshape(b * h, l, n),
+                   cc.reshape(b * h, l, n), a.reshape(b * h, l))
+    np.testing.assert_allclose(np.asarray(got).reshape(b * h, l, p),
+                               np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_final_state_continues_sequence():
+    """return_state: running [0:64] then [64:96] from the saved state equals
+    the full [0:96] run (the prefill->decode contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    b, h, l, p, n = 1, 2, 96, 8, 4
+    x = jax.random.normal(ks[0], (b, h, l, p))
+    bb = jax.random.normal(ks[1], (b, h, l, n)) * 0.5
+    cc = jax.random.normal(ks[2], (b, h, l, n)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[3], (b, h, l))) * 0.1
+    y_full = ssd_chunked(x, bb, cc, a, chunk=32)
+    _, h64 = ssd_chunked(x[:, :, :64], bb[:, :, :64], cc[:, :, :64],
+                         a[:, :, :64], chunk=32, return_state=True)
+    # continue step by step from the saved state
+    hs = np.asarray(h64, np.float64)
+    ys = []
+    for t in range(64, 96):
+        hn = np.exp(np.asarray(a[:, :, t]))[..., None, None] * hs + \
+            np.einsum("bhn,bhp->bhnp", np.asarray(bb[:, :, t], np.float64),
+                      np.asarray(x[:, :, t], np.float64))
+        ys.append(np.einsum("bhn,bhnp->bhp",
+                            np.asarray(cc[:, :, t], np.float64), hn))
+        hs = hn
+    got_tail = np.stack(ys, axis=2)          # (b, h, 32, p)
+    np.testing.assert_allclose(got_tail, np.asarray(y_full[:, :, 64:]),
+                               rtol=2e-3, atol=2e-3)

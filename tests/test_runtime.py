@@ -1,0 +1,193 @@
+"""Runtime substrate tests: data pipeline, checkpoint manager, optimizer,
+gradient compression, schedules, roofline/HLO parsing."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticLM
+from repro.checkpoint import CheckpointManager
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (compress_residual, dequantize,
+                                     init_error_state, quantize)
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+from repro.launch.roofline import param_count, model_flops
+from repro import configs
+
+
+# ------------------------------------------------------------------- data --
+def test_data_deterministic_restartable():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+    d1, d2 = SyntheticLM(cfg), SyntheticLM(cfg)
+    b1, b2 = d1.batch_at(13), d2.batch_at(13)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    assert b1["tokens"].max() < 100
+
+
+def test_data_host_sharding_partition():
+    base = DataConfig(vocab=50, seq_len=8, global_batch=8, seed=1)
+    full = SyntheticLM(base).batch_at(3)["tokens"]
+    # each host sees a batch of global/n_hosts with host-dependent content
+    h0 = SyntheticLM(DataConfig(vocab=50, seq_len=8, global_batch=8, seed=1,
+                                n_hosts=2, host_id=0)).batch_at(3)["tokens"]
+    h1 = SyntheticLM(DataConfig(vocab=50, seq_len=8, global_batch=8, seed=1,
+                                n_hosts=2, host_id=1)).batch_at(3)["tokens"]
+    assert h0.shape == (4, 8) and h1.shape == (4, 8)
+    assert not np.array_equal(h0, h1)
+    assert full.shape == (8, 8)
+
+
+def test_data_iterator_prefetch():
+    cfg = DataConfig(vocab=32, seq_len=4, global_batch=2)
+    it = SyntheticLM(cfg).iterate(start_step=5)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"],
+                                  SyntheticLM(cfg).batch_at(5)["tokens"])
+
+
+def test_data_learnable_structure():
+    cfg = DataConfig(vocab=64, seq_len=128, global_batch=4)
+    b = SyntheticLM(cfg).batch_at(0)
+    follows = np.mean(b["tokens"][:, 1:] == (b["tokens"][:, :-1] * 7 + 3) % 64)
+    assert follows > 0.5  # mostly predictable transitions
+
+
+# -------------------------------------------------------------- checkpoint --
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)}}
+    mgr.save(10, tree, blocking=True)
+    assert mgr.latest_step() == 10
+    out = mgr.restore(10, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["nested"]["b"]),
+                                  np.asarray(tree["nested"]["b"]))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"x": jnp.zeros((8,))}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, {"x": jnp.full((8,), float(step))})
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+    out = mgr.restore(4, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.full(8, 4.0))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"x": jnp.zeros((4,))}, blocking=True)
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"x": jnp.zeros((5,))})
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stray .tmp dir from a crashed writer is not considered a checkpoint."""
+    mgr = CheckpointManager(tmp_path)
+    (tmp_path / "step_00000007.tmp").mkdir()
+    assert mgr.latest_step() is None
+    mgr.save(3, {"x": jnp.zeros(2)}, blocking=True)
+    assert mgr.latest_step() == 3
+
+
+# --------------------------------------------------------------- optimizer --
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = OptConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    cfg = OptConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update({"w": jnp.full(3, 100.0)}, state, params, cfg)
+    assert float(metrics["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_cosine_schedule():
+    assert float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100)) == 0.0
+    assert abs(float(cosine_schedule(10, peak_lr=1.0, warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(cosine_schedule(100, peak_lr=1.0, warmup=10, total=100, min_frac=0.1))
+    assert abs(end - 0.1) < 1e-6
+
+
+# ------------------------------------------------------------- compression --
+def test_quantize_roundtrip_error_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, scale = quantize(g)
+    err = np.abs(np.asarray(dequantize(q, scale) - g))
+    assert err.max() <= float(scale) * 0.5 + 1e-7
+
+
+def test_error_feedback_accumulates_to_truth():
+    """Sum over steps of compressed grads ~= sum of true grads (EF property)."""
+    key = jax.random.PRNGKey(1)
+    gs = jax.random.normal(key, (50, 64)) * jnp.linspace(1, 3, 50)[:, None]
+    err = jnp.zeros(64)
+    total_sent = jnp.zeros(64)
+    for i in range(50):
+        q, scale, err = compress_residual(gs[i], err)
+        total_sent = total_sent + dequantize(q, scale)
+    true_total = jnp.sum(gs, axis=0)
+    # residual error is bounded by the last quantization step, not O(T)
+    assert float(jnp.max(jnp.abs(total_sent + err - true_total))) < 1e-4
+
+
+def test_init_error_state_shapes():
+    params = {"a": jnp.zeros((2, 3), jnp.bfloat16)}
+    es = init_error_state(params)
+    assert es["a"].shape == (2, 3) and es["a"].dtype == jnp.float32
+
+
+# ------------------------------------------------------ HLO / roofline utils --
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,4096]{1,0}") == 128 * 4096 * 2
+    assert _shape_bytes("f32[16]") == 64
+    assert _shape_bytes("pred[2,2]") == 4
+
+
+def test_collective_bytes_parses():
+    hlo = """
+  %ag = bf16[2,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%add
+  %ars = f32[64]{0} all-reduce-start(%y), to_apply=%add
+  %ard = f32[64]{0} all-reduce-done(%ars)
+  %cp = s8[32,32]{1,0} collective-permute(%z)
+"""
+    total, per_kind, counts = collective_bytes(hlo)
+    assert per_kind["all-gather"] == 2 * 128 * 2
+    assert per_kind["all-reduce"] == 64 * 4 * 2   # ar + ar-start; -done skipped
+    assert per_kind["collective-permute"] == 32 * 32
+    assert counts["all-reduce"] == 2
+
+
+def test_param_count_sane():
+    n = param_count(configs.get("granite-8b"))
+    assert 7e9 < n < 9.5e9
+    n_active = param_count(configs.get("qwen3-moe-30b-a3b"), active_only=True)
+    n_total = param_count(configs.get("qwen3-moe-30b-a3b"))
+    assert n_active < n_total / 4
+    n_arctic = param_count(configs.get("arctic-480b"))
+    assert 4e11 < n_arctic < 5.5e11
+
+
+def test_model_flops_kinds():
+    cfg = configs.get("smollm-360m")
+    t = model_flops(cfg, "train", 4096, 256)
+    p = model_flops(cfg, "prefill", 4096, 256)
+    d = model_flops(cfg, "decode", 4096, 256)
+    assert t == 3 * p and d < p / 1000
