@@ -1,0 +1,14 @@
+PY ?= python
+
+# Tier-1 verification command (see ROADMAP.md).
+.PHONY: test
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+.PHONY: test-fast
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+.PHONY: bench-planner
+bench-planner:
+	PYTHONPATH=src $(PY) benchmarks/bench_planner.py

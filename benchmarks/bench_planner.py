@@ -1,0 +1,89 @@
+"""Plan-cached fused einsumsvd engine vs the seed path (ISSUE 1 tentpole).
+
+A/B on ``contract_twolayer`` (two-layer IBMPS, the library's hottest path):
+
+* **seed**  — ``planner.disabled()`` + ``RandomizedSVD(fused=False)``: every
+  matvec of every power iteration re-derives an "optimal" einsum path, and
+  no compiled code is shared across the structurally-identical sites of the
+  zip-up sweep (the behavior the seed repo shipped).
+* **fused** — plan-cached paths + one jit-compiled randomized-SVD per
+  network signature, replayed across sites/rows/sweeps.
+
+Steady-state wall-clock is what the ITE/VQE evolution loops pay per energy
+evaluation, so both variants get a warmup call before timing.  Cache
+hit-rate counters are printed alongside.
+
+Run: ``PYTHONPATH=src python benchmarks/bench_planner.py`` (or
+``make bench-planner``).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+
+from benchmarks.common import SCALE, emit, emit_info, save_rows, timeit
+from repro.core import planner
+from repro.core.bmps import BMPS, contract_twolayer
+from repro.core.einsumsvd import RandomizedSVD
+from repro.core.peps import random_peps
+
+
+def main():
+    grid = 6 if SCALE == "small" else 8
+    bond = 2
+    chis = (32,) if SCALE == "small" else (32, 64)
+    key = jax.random.PRNGKey(0)
+    state = random_peps(grid, grid, bond, key)
+    ckey = jax.random.PRNGKey(1)
+
+    for chi in chis:
+        seed_opt = BMPS(chi, RandomizedSVD(niter=2, oversample=4,
+                                           fused=False))
+        fused_opt = BMPS.randomized(chi, niter=2, oversample=4)
+
+        def run_seed():
+            with planner.disabled():
+                return contract_twolayer(state.sites, state.sites, seed_opt,
+                                         ckey)
+
+        def run_fused():
+            return contract_twolayer(state.sites, state.sites, fused_opt,
+                                     ckey)
+
+        # consistency first: the two engines agree on the same key
+        planner.clear()
+        v_seed = complex(run_seed())
+        v_fused = complex(run_fused())
+        rel = abs(v_seed - v_fused) / max(abs(v_seed), 1e-300)
+        assert rel < 1e-5, (v_seed, v_fused)
+
+        t_seed = timeit(run_seed, repeats=3, warmup=1)
+        planner.reset_stats()
+        t_fused = timeit(run_fused, repeats=3, warmup=1)
+        s = planner.stats()
+        total = s["fused_hits"] + s["fused_misses"]
+        hit_rate = s["fused_hits"] / max(total, 1)
+
+        emit(f"planner/{grid}x{grid}/chi{chi}/seed", t_seed,
+             f"bond={bond}")
+        emit(f"planner/{grid}x{grid}/chi{chi}/fused", t_fused,
+             f"bond={bond},fused_hit_rate={hit_rate:.3f},"
+             f"path_hits={s['path_hits']},path_misses={s['path_misses']}")
+        speedup = t_seed / t_fused
+        emit_info(f"planner/{grid}x{grid}/chi{chi}/speedup",
+                  f"x{speedup:.2f}")
+        print(f"# contract_twolayer {grid}x{grid} chi={chi}: "
+              f"seed {t_seed*1e3:.1f} ms -> fused {t_fused*1e3:.1f} ms "
+              f"({speedup:.2f}x, fused hit rate {hit_rate:.1%})")
+        if speedup <= 1.0:
+            print(f"# WARNING: fused engine did not beat seed at chi={chi}")
+
+    save_rows("bench_planner.json")
+
+
+if __name__ == "__main__":
+    main()

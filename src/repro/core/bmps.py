@@ -33,10 +33,23 @@ class BMPS:
     gives IBMPS / two-layer IBMPS.  ``chi`` is the truncation bond dim m.
     ``constrain_carry`` (distributed runs): callable applied to the zip-up
     carry V between einsumsvd steps — used to pin its sharding.
+
+    All interior sites of a zip-up row share one network signature, so with
+    the (default) fused RandomizedSVD the whole sweep reuses a single
+    jit-compiled refactorization per row position class — the planner cache
+    (repro.core.planner) turns the per-site einsumsvd into a compiled-call
+    replay across sites, rows, and sweeps.
     """
     chi: int
     svd: object = DirectSVD()
     constrain_carry: object = None
+
+    @classmethod
+    def randomized(cls, chi: int, niter: int = 4, oversample: int = 8,
+                   fused: bool = True, **kw) -> "BMPS":
+        """IBMPS / two-layer IBMPS option with the fused implicit engine."""
+        return cls(chi, svd=RandomizedSVD(niter=niter, oversample=oversample,
+                                          fused=fused), **kw)
 
 
 def _keys(key, n):

@@ -10,6 +10,27 @@ decides how:
 
 All paths truncate to a *static* rank (jit-friendly); an optional relative
 ``cutoff`` additionally zeroes trailing singular values (shape-preserving).
+
+Planner architecture (see :mod:`repro.core.planner`)
+----------------------------------------------------
+The hot path is plan-cached and fused, keyed by the **network signature**
+``(subscripts, shapes, dtypes, row, col)``:
+
+* *Signature keying* — every einsumsvd subnetwork with the same structure
+  (e.g. all interior sites of a BMPS zip-up row, across rows and sweeps)
+  maps to one cache entry; a different shape/dtype/split is a different
+  entry.
+* *Fusion boundary* — with ``RandomizedSVD(fused=True)`` (the default) the
+  whole refactorization (sketch -> power iterations -> Gram-QR final +
+  small SVD) is one jit-compiled function per signature; the contraction
+  paths inside it are memoized by the planner's path cache, which also
+  serves the unfused and :class:`DirectSVD` paths through
+  ``ImplicitOperator``.
+* *Kernel dispatch rule* — the Gram matrices of the orthogonalization steps
+  route to the Pallas streaming-Gram kernel when the operand is tall-skinny
+  (``nbig >= 8 * nsmall``, small side <= 512), 32-bit, and a TPU backend is
+  active; otherwise the dense reshape-free contraction runs (see
+  ``orthogonalize.set_gram_backend``).
 """
 from __future__ import annotations
 
@@ -19,6 +40,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import planner
 from repro.core.rsvd import ImplicitOperator, randomized_svd
 
 
@@ -53,15 +75,27 @@ class RandomizedSVD:
     """Implicit randomized SVD (paper Alg. 4).
 
     ``gram_final`` replaces the paper's dense k x Ncol final SVD with a
-    Gram-QR + local k x k SVD (beyond-paper; see EXPERIMENTS.md SSPerf)."""
+    Gram-QR + local k x k SVD (beyond-paper; see EXPERIMENTS.md SSPerf).
+
+    ``fused`` (default) runs the whole solve as one jit-compiled function
+    per network signature, reused across all structurally-identical
+    einsumsvd calls (see :mod:`repro.core.planner`).  ``fused=False`` is the
+    op-by-op reference path; both produce the same result for the same key.
+    """
     niter: int = 4
     oversample: int = 8
     cutoff: float = 0.0
     gram_final: bool = True
+    fused: bool = True
 
     def __call__(self, op: ImplicitOperator, rank: int, key=None):
-        u, s, v = randomized_svd(op, rank, self.niter, self.oversample, key,
-                                 gram_final=self.gram_final)
+        if self.fused:
+            u, s, v = planner.fused_randomized_svd(
+                op, rank, n_iter=self.niter, oversample=self.oversample,
+                key=key, gram_final=self.gram_final)
+        else:
+            u, s, v = randomized_svd(op, rank, self.niter, self.oversample,
+                                     key, gram_final=self.gram_final)
         s = _apply_cutoff(s, self.cutoff)
         return u, s, v
 

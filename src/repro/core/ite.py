@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gates as G
+from repro.core import planner
 from repro.core import statevector as sv
 from repro.core.bmps import BMPS
 from repro.core.expectation import expectation
@@ -39,6 +40,10 @@ class ITEResult:
     state: PEPS
     energies: List[float]
     steps: List[int]
+    # planner cache counters over the run (path/fused hit rates) — the
+    # evolution loop re-applies the same Trotter moments every step, so
+    # after step 1 the einsumsvd engine should be all cache hits.
+    planner_stats: Optional[dict] = None
 
 
 def ite_run(
@@ -57,6 +62,7 @@ def ite_run(
         key = jax.random.PRNGKey(2020)
     moments = trotter_moments(obs, tau)
     energies, measured_at = [], []
+    planner_before = planner.stats()
     for step in range(steps):
         for g, sites in moments:
             key, sub = jax.random.split(key)
@@ -70,7 +76,8 @@ def ite_run(
             measured_at.append(step + 1)
             if callback is not None:
                 callback(step + 1, e, state)
-    return ITEResult(state, energies, measured_at)
+    return ITEResult(state, energies, measured_at,
+                     planner.stats_since(planner_before))
 
 
 def ite_statevector(nrow: int, ncol: int, obs: Observable, tau: float,

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 _EPS = {jnp.float32.dtype: 1e-6, jnp.float64.dtype: 1e-13,
@@ -20,6 +21,82 @@ _EPS = {jnp.float32.dtype: 1e-6, jnp.float64.dtype: 1e-13,
 
 def _eps_for(dtype) -> float:
     return _EPS.get(jnp.dtype(dtype), 1e-6)
+
+
+# --------------------------------------------------------------------------
+# Gram backend dispatch (tall-skinny hot path -> Pallas kernel)
+# --------------------------------------------------------------------------
+#
+# The Gram matrix G = A^H A of Alg. 5 is the tall-skinny GEMM the Pallas
+# ``gram`` kernel (src/repro/kernels/gram.py) implements: G stays in VMEM
+# while A streams through in tiles.  Dispatch rule ("auto"):
+#   * f32/bf16/c64 only (the kernel accumulates in f32 — routing f64 there
+#     would silently halve precision), AND
+#   * tall and skinny: nbig >= _PALLAS_MIN_BIG, nsmall <= _PALLAS_MAX_SMALL,
+#     nbig >= 8 * nsmall, AND
+#   * a real TPU backend (on CPU the kernel runs in interpret mode, which is
+#     for correctness testing, not speed).
+# "pallas" forces the kernel (interpret mode off-TPU; still dtype-gated);
+# "dense" forces the jnp contraction.  See tests/test_planner.py.
+
+_GRAM_BACKEND = {"mode": "auto"}
+_PALLAS_MIN_BIG = 4096
+_PALLAS_MAX_SMALL = 512
+_DISPATCH_COUNTERS = {"pallas_gram_calls": 0, "dense_gram_calls": 0}
+
+# dtypes the f32-accumulating kernel serves at full (or better) precision
+_KERNEL_DTYPES = (jnp.float32.dtype, jnp.bfloat16.dtype, jnp.complex64.dtype)
+
+
+def set_gram_backend(mode: str) -> str:
+    """Select the Gram backend: 'auto' (shape/dtype/backend-gated Pallas),
+    'pallas' (force the kernel), or 'dense'.  Returns the previous mode."""
+    if mode not in ("auto", "pallas", "dense"):
+        raise ValueError(f"bad gram backend {mode!r}")
+    prev = _GRAM_BACKEND["mode"]
+    _GRAM_BACKEND["mode"] = mode
+    return prev
+
+
+def gram_backend() -> str:
+    """The currently-selected Gram backend mode ('auto'|'pallas'|'dense')."""
+    return _GRAM_BACKEND["mode"]
+
+
+def gram_dispatch_stats() -> dict:
+    return dict(_DISPATCH_COUNTERS)
+
+
+def reset_gram_dispatch_stats() -> None:
+    for k in _DISPATCH_COUNTERS:
+        _DISPATCH_COUNTERS[k] = 0
+
+
+def _pallas_eligible(dtype, nbig: int, nsmall: int) -> bool:
+    if jnp.dtype(dtype) not in _KERNEL_DTYPES:
+        return False
+    mode = _GRAM_BACKEND["mode"]
+    if mode == "pallas":
+        return True
+    return (nbig >= _PALLAS_MIN_BIG and nsmall <= _PALLAS_MAX_SMALL
+            and nbig >= 8 * nsmall and jax.default_backend() == "tpu")
+
+
+def _gram_matrix(a: jnp.ndarray, big_axes: Tuple[int, ...],
+                 nbig: int, nsmall: int) -> jnp.ndarray:
+    """G = A^H A as an (nsmall, nsmall) matrix, Pallas-dispatched."""
+    if _GRAM_BACKEND["mode"] != "dense" and _pallas_eligible(a.dtype, nbig,
+                                                             nsmall):
+        from repro.kernels.gram import gram, gram_complex
+        _DISPATCH_COUNTERS["pallas_gram_calls"] += 1
+        mat = a.reshape(nbig, nsmall)
+        interpret = jax.default_backend() != "tpu"
+        if jnp.issubdtype(a.dtype, jnp.complexfloating):
+            return gram_complex(mat, interpret=interpret)
+        return gram(mat, interpret=interpret)
+    _DISPATCH_COUNTERS["dense_gram_calls"] += 1
+    g = jnp.tensordot(a.conj(), a, axes=(big_axes, big_axes))
+    return g.reshape(nsmall, nsmall)
 
 
 def gram_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -47,9 +124,9 @@ def gram_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         nsmall *= s
 
     big_axes = tuple(range(a.ndim - n_small))
-    # G_{cc'} = sum_big conj(A)_{big,c} A_{big,c'} — contraction, no reshape of A.
-    g = jnp.tensordot(a.conj(), a, axes=(big_axes, big_axes))
-    g_mat = g.reshape(nsmall, nsmall)  # small, local
+    # G_{cc'} = sum_big conj(A)_{big,c} A_{big,c'} — contraction, no reshape of A
+    # (or the Pallas streaming-Gram kernel when the operand qualifies).
+    g_mat = _gram_matrix(a, big_axes, nbig, nsmall)  # small, local
     lam, x = jnp.linalg.eigh(g_mat)
     eps = _eps_for(a.dtype) * jnp.maximum(jnp.max(jnp.abs(lam)), 1.0)
     lam = jnp.maximum(lam.real, eps)

@@ -1,0 +1,226 @@
+"""Contraction-plan cache and fused einsumsvd engine (the library's hot path).
+
+A BMPS sweep calls ``einsumsvd`` once per site, and every site of a row (bar
+the edges) presents the *same* tensor-network structure: same subscripts,
+same shapes, same dtype, same row/col split.  The paper (arXiv:2006.15234,
+Alg. 4) and Lubasch et al. (arXiv:1405.3259) exploit exactly this repeated
+subnetwork structure; the seed implementation instead re-derived an
+``optimize="optimal"`` einsum path on every ``matvecs``/``rmatvecs`` call of
+every power iteration and never reused compiled code across sites.
+
+This module fixes both with two memoization layers, keyed by a **network
+signature**:
+
+``signature = (subscripts, shapes, dtypes, row, col [, solver config])``
+
+1. **Path cache** — :func:`contraction_path` memoizes the opt_einsum
+   contraction path for an einsum expression + operand shapes.
+   :class:`~repro.core.rsvd.ImplicitOperator` routes every contraction
+   through :func:`cached_einsum`, so the path search runs once per distinct
+   network shape instead of once per matvec.
+2. **Fused-solver cache** — :func:`fused_randomized_svd` jit-compiles the
+   whole randomized-SVD refactorization (sketch -> power iterations ->
+   Gram-QR final) as ONE function per signature.  All sites / rows / sweeps
+   of ``contract_onelayer``, ``contract_twolayer`` and the ITE/VQE loops
+   that share a signature reuse the same compiled executable.
+
+Hit/miss counters are kept per layer (:func:`stats`) so tests and benchmarks
+can assert cache behavior.  Counters tick at Python dispatch time: a fused
+HIT means a previously-built compiled function was re-invoked.
+
+:func:`disabled` temporarily switches both layers off, restoring the seed
+behavior — used by ``benchmarks/bench_planner.py`` for A/B timing.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import opt_einsum
+
+# --------------------------------------------------------------------------
+# Configuration + counters
+# --------------------------------------------------------------------------
+
+_CONFIG = {
+    "path_cache": True,   # memoize einsum contraction paths
+    "fusion": True,       # jit-fuse randomized_svd per network signature
+}
+
+_PATH_CACHE: Dict[tuple, list] = {}
+_FUSED_CACHE: Dict[tuple, object] = {}
+
+_COUNTERS = {
+    "path_hits": 0,
+    "path_misses": 0,
+    "path_uncached": 0,    # path searches with the cache disabled
+    "fused_hits": 0,
+    "fused_misses": 0,
+}
+
+
+def stats() -> Dict[str, int]:
+    """Current cache counters + sizes (copies; safe to hold)."""
+    out = dict(_COUNTERS)
+    out["path_cache_size"] = len(_PATH_CACHE)
+    out["fused_cache_size"] = len(_FUSED_CACHE)
+    from repro.core import orthogonalize as _orth
+    out.update(_orth.gram_dispatch_stats())
+    return out
+
+
+def stats_since(before: Dict[str, int]) -> Dict[str, int]:
+    """Counter deltas relative to an earlier :func:`stats` snapshot.
+
+    Cache sizes (``*_cache_size``) stay absolute; everything else is the
+    difference.  Lets callers measure a window without resetting the
+    process-global counters."""
+    now = stats()
+    return {k: v if k.endswith("_cache_size") else v - before.get(k, 0)
+            for k, v in now.items()}
+
+
+def reset_stats() -> None:
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+    from repro.core import orthogonalize as _orth
+    _orth.reset_gram_dispatch_stats()
+
+
+def clear() -> None:
+    """Drop both caches (and counters).  Compiled executables are released."""
+    _PATH_CACHE.clear()
+    _FUSED_CACHE.clear()
+    reset_stats()
+
+
+@contextlib.contextmanager
+def disabled():
+    """Temporarily restore the seed behavior (no path cache, no fusion)."""
+    prev = dict(_CONFIG)
+    _CONFIG["path_cache"] = False
+    _CONFIG["fusion"] = False
+    try:
+        yield
+    finally:
+        _CONFIG.update(prev)
+
+
+def configure(*, path_cache: bool = None, fusion: bool = None) -> Dict[str, bool]:
+    """Flip individual layers; returns the previous configuration."""
+    prev = dict(_CONFIG)
+    if path_cache is not None:
+        _CONFIG["path_cache"] = path_cache
+    if fusion is not None:
+        _CONFIG["fusion"] = fusion
+    return prev
+
+
+# --------------------------------------------------------------------------
+# Signatures
+# --------------------------------------------------------------------------
+
+def network_signature(subscripts: Sequence[str],
+                      shapes: Sequence[Tuple[int, ...]],
+                      dtypes: Sequence,
+                      row: str, col: str) -> tuple:
+    """Hashable identity of an einsumsvd subnetwork.
+
+    Two calls with equal signatures are guaranteed to contract identically:
+    same labels, operand shapes, operand dtypes and row/col split."""
+    return (
+        tuple(subscripts),
+        tuple(tuple(s) for s in shapes),
+        tuple(jnp.dtype(d).name for d in dtypes),
+        row,
+        col,
+    )
+
+
+# --------------------------------------------------------------------------
+# Layer 1: contraction-path cache
+# --------------------------------------------------------------------------
+
+def contraction_path(expr: str, shapes: Tuple[Tuple[int, ...], ...]) -> list:
+    """Optimal contraction path for ``expr`` over operands of ``shapes``.
+
+    Memoized on (expr, shapes); the search itself runs on shapes only (no
+    array data), via opt_einsum."""
+    if not _CONFIG["path_cache"]:
+        _COUNTERS["path_uncached"] += 1
+        path, _ = opt_einsum.contract_path(expr, *shapes, shapes=True,
+                                           optimize="optimal")
+        return path
+    key = (expr, shapes)
+    hit = _PATH_CACHE.get(key)
+    if hit is not None:
+        _COUNTERS["path_hits"] += 1
+        return hit
+    _COUNTERS["path_misses"] += 1
+    path, _ = opt_einsum.contract_path(expr, *shapes, shapes=True,
+                                       optimize="optimal")
+    _PATH_CACHE[key] = path
+    return path
+
+
+def cached_einsum(expr: str, *tensors: jnp.ndarray) -> jnp.ndarray:
+    """``jnp.einsum`` along a plan-cached optimal path."""
+    path = contraction_path(expr, tuple(tuple(t.shape) for t in tensors))
+    return jnp.einsum(expr, *tensors, optimize=path)
+
+
+# --------------------------------------------------------------------------
+# Layer 2: fused randomized-SVD solver cache
+# --------------------------------------------------------------------------
+
+def _build_fused(subscripts: Tuple[str, ...], row: str, col: str,
+                 rank: int, n_iter: int, oversample: int, gram_final: bool):
+    from repro.core.rsvd import ImplicitOperator, randomized_svd
+
+    @jax.jit
+    def run(tensors: List[jnp.ndarray], key):
+        op = ImplicitOperator(tensors, list(subscripts), row, col)
+        return randomized_svd(op, rank, n_iter=n_iter, oversample=oversample,
+                              key=key, gram_final=gram_final)
+
+    return run
+
+
+def fused_randomized_svd(op, rank: int, n_iter: int = 4, oversample: int = 8,
+                         key=None, gram_final: bool = True):
+    """Randomized SVD of an :class:`ImplicitOperator`, jit-fused per signature.
+
+    The entire Alg. 4 pipeline — random sketch, power iterations (with
+    Gram-QR orthogonalizations), final Gram-QR + small dense SVD — compiles
+    to one executable, cached on the network signature + solver config and
+    reused by every einsumsvd call with the same structure.  Numerically
+    identical to :func:`repro.core.rsvd.randomized_svd` (same ops, traced).
+    """
+    from repro.core import orthogonalize as _orth
+    from repro.core.rsvd import randomized_svd
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if not _CONFIG["fusion"]:
+        return randomized_svd(op, rank, n_iter=n_iter, oversample=oversample,
+                              key=key, gram_final=gram_final)
+    sig = network_signature(op.subscripts,
+                            [t.shape for t in op.tensors],
+                            [t.dtype for t in op.tensors],
+                            op.row, op.col)
+    # The Gram backend choice is a trace-time decision baked into the
+    # compiled executable, so it (and the device backend) must be part of
+    # the key — otherwise set_gram_backend() would be silently ignored for
+    # already-compiled signatures.
+    sig = sig + (rank, n_iter, oversample, gram_final,
+                 _orth.gram_backend(), jax.default_backend())
+    fn = _FUSED_CACHE.get(sig)
+    if fn is None:
+        _COUNTERS["fused_misses"] += 1
+        fn = _build_fused(tuple(op.subscripts), op.row, op.col,
+                          rank, n_iter, oversample, gram_final)
+        _FUSED_CACHE[sig] = fn
+    else:
+        _COUNTERS["fused_hits"] += 1
+    return fn(list(op.tensors), key)

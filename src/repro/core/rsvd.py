@@ -14,6 +14,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import planner
 from repro.core.orthogonalize import orthogonalize_cols
 
 _ALL_LABELS = string.ascii_letters
@@ -84,7 +85,9 @@ class ImplicitOperator:
         tensors = [t.conj() for t in self.tensors] if conjugate else self.tensors
         tensors = tensors + extra_tensors
         expr = ",".join(subs) + "->" + out
-        return jnp.einsum(expr, *tensors, optimize="optimal")
+        # Plan-cached path: the optimal-path search runs once per distinct
+        # (expr, shapes) instead of once per matvec (see core/planner.py).
+        return planner.cached_einsum(expr, *tensors)
 
     def dense(self) -> jnp.ndarray:
         """Materialize A as a tensor of shape row_shape + col_shape."""

@@ -59,11 +59,17 @@ def run_vqe(
     seed: int = 0,
     backend: str = "peps",
     method: str = "SLSQP",
+    svd: Optional[object] = None,
 ) -> VQEResult:
     """Minimize the PEPS-simulated (or statevector) energy over the ansatz.
 
     ``max_bond`` is the PEPS evolution bond dimension (paper's \"maximum
-    bond dimension\"); ``contract_bond`` the contraction chi (default 2x)."""
+    bond dimension\"); ``contract_bond`` the contraction chi (default 2x).
+    ``svd`` selects the einsumsvd engine for both evolution and contraction
+    (e.g. ``RandomizedSVD()`` for the fused implicit path — every energy
+    evaluation replays the same network signatures, so the planner cache
+    amortizes compilation across the whole optimization); default DirectSVD.
+    """
     from scipy import optimize
 
     n = nrow * ncol
@@ -71,8 +77,12 @@ def run_vqe(
     x0 = rng.uniform(-0.1, 0.1, size=n_layers * n)
     history: List[float] = []
     chi = contract_bond or max(2 * max_bond, 4)
-    update = QRUpdate(rank=max_bond)
-    contract = BMPS(chi)
+    if svd is None:
+        update = QRUpdate(rank=max_bond)
+        contract = BMPS(chi)
+    else:
+        update = QRUpdate(rank=max_bond, svd=svd)
+        contract = BMPS(chi, svd=svd)
 
     def objective(x):
         if backend == "peps":

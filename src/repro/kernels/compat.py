@@ -1,0 +1,12 @@
+"""Version-compat shims for Pallas-TPU APIs.
+
+``pltpu.CompilerParams`` was called ``TPUCompilerParams`` in older JAX
+releases; kernels import the alias from here so they run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = pltpu.TPUCompilerParams

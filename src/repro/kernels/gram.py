@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _gram_kernel(a_ref, g_ref, acc_ref):
     k = pl.program_id(0)
@@ -50,7 +52,7 @@ def gram(a: jnp.ndarray, *, bm: int = 256, interpret: bool = True) -> jnp.ndarra
         out_specs=pl.BlockSpec((np_, np_), lambda k: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, np_), a.dtype),
         scratch_shapes=[pltpu.VMEM((np_, np_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(a)

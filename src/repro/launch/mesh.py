@@ -10,23 +10,45 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType (and the axis_types= kwarg of jax.make_mesh) only
+# exist in newer JAX releases; older versions build the same Auto-typed mesh
+# with no kwarg at all.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """General mesh helper with Auto axis types (tests, elastic restarts)."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                         **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """1x1 mesh on the local device (smoke tests / examples)."""
     return make_mesh((1, 1), ("data", "model"))
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Newer JAX spells this ``jax.set_mesh(mesh)``; on older releases the
+    ``Mesh`` object itself is the context manager.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 # TPU v5e-class hardware constants used by the roofline (assignment §ROOFLINE)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models.model import build
 
 
@@ -44,7 +44,7 @@ def main(argv=None):
         0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
     max_seq = args.prompt_len + args.gen
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         t0 = time.time()
         if cfg.family in ("ssm", "hybrid"):
             # SSM decode: feed the prompt token by token (no KV prefill)

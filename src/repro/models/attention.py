@@ -46,12 +46,12 @@ def _qkv(x, p, cfg: Config, mesh, positions, rope: bool):
         k = constrain(k, mesh, ("batch", None, "act_heads", None))
     elif m > 1 and s % m == 0:
         # heads unshardable on this TP size: sequence-parallel queries
-        from jax.sharding import NamedSharding, PartitionSpec
-        from repro.models.common import batch_axes
+        from jax.sharding import PartitionSpec
+        from repro.models.common import batch_axes, sharding_constraint
         b_ax = batch_axes(mesh)
-        q = jax.lax.with_sharding_constraint(
-            q, NamedSharding(mesh, PartitionSpec(b_ax if b_ax else None,
-                                                 "model", None, None)))
+        q = sharding_constraint(
+            q, mesh, PartitionSpec(b_ax if b_ax else None,
+                                   "model", None, None))
     return q, k, v
 
 
@@ -76,12 +76,12 @@ def _constrain_scores(x, mesh):
     if (kv * group) % m == 0:
         return x                                  # GSPMD's 2-D head tiling
     if s % m == 0:
-        from repro.models.common import batch_axes
-        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.models.common import batch_axes, sharding_constraint
+        from jax.sharding import PartitionSpec
         b_ax = batch_axes(mesh)
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, PartitionSpec(b_ax if b_ax else None,
-                                                 None, None, "model", None)))
+        return sharding_constraint(
+            x, mesh, PartitionSpec(b_ax if b_ax else None,
+                                   None, None, "model", None))
     return x
 
 

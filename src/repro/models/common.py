@@ -18,6 +18,41 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(fn, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """Version-compat ``shard_map`` (new ``jax.shard_map`` keyword API).
+
+    Older JAX only has ``jax.experimental.shard_map.shard_map`` whose
+    ``auto=`` is the complement of ``axis_names`` and whose replication
+    check is spelled ``check_rep``.
+    """
+    jsm = getattr(jax, "shard_map", None)
+    if jsm is not None:
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jsm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+    # Legacy partial-auto lowering is fragile (XLA aborts on
+    # IsManualSubgroup for common bodies), so go manual over ALL axes:
+    # numerically identical, at the cost of compute replicated over the
+    # would-be-auto axes — acceptable on the small compat meshes.
+    if axis_names is not None and frozenset(axis_names) != frozenset(
+            mesh.axis_names):
+        import warnings
+        auto = sorted(frozenset(mesh.axis_names) - frozenset(axis_names))
+        warnings.warn(
+            f"legacy JAX shard_map fallback: going manual over ALL of "
+            f"{mesh.axis_names} (requested manual={sorted(axis_names)}); "
+            f"compute will be REPLICATED over {auto} — fine on small "
+            f"compat meshes, a blowup on production meshes.",
+            stacklevel=2)
+    return legacy_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=check_vma,
+                            auto=frozenset())
+
+
 # ---------------------------------------------------------------------------
 # Param specs
 # ---------------------------------------------------------------------------
@@ -139,7 +174,14 @@ def manual_axes() -> set:
             return set()
         return {n for n, t in zip(am.axis_names, am.axis_types)
                 if "Manual" in str(t)}
-    except Exception:  # noqa: BLE001 — no tracing context
+    except Exception:  # noqa: BLE001 — old JAX / no tracing context
+        pass
+    # Legacy JAX: inside shard_map the manual axes are exactly the named
+    # axes bound in the axis environment.
+    try:
+        from jax._src import core as _core
+        return set(_core.get_axis_env().axis_sizes)
+    except Exception:  # noqa: BLE001
         return set()
 
 
@@ -147,6 +189,19 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     skip = manual_axes()
     return tuple(a for a in ("pod", "data")
                  if a in mesh.axis_names and a not in skip)
+
+
+def sharding_constraint(x: jnp.ndarray, mesh: Mesh, spec) -> jnp.ndarray:
+    """``with_sharding_constraint`` that degrades to a no-op where unsafe.
+
+    On legacy JAX (no ``jax.shard_map``), emitting a full-mesh sharding
+    constraint inside a partial-auto shard_map trips XLA's
+    ``IsManualSubgroup`` check and aborts compilation; the constraint is
+    only a placement hint, so inside legacy manual regions we drop it.
+    """
+    if manual_axes() and not hasattr(jax, "shard_map"):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
 def constrain(x: jnp.ndarray, mesh: Mesh, logical: Sequence[Optional[str]],
@@ -164,7 +219,7 @@ def constrain(x: jnp.ndarray, mesh: Mesh, logical: Sequence[Optional[str]],
         rules = {k: (v[0] if isinstance(v, tuple) and len(v) == 1 else v)
                  for k, v in rules.items()}
     spec = resolve_spec(x.shape, logical, mesh, rules)
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return sharding_constraint(x, mesh, spec)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,92 @@
+"""Optional-dependency guard for ``hypothesis`` (ISSUE 1 satellite).
+
+``hypothesis`` is a *test-only, optional* dependency (declared in
+``requirements-dev.txt`` / ``pyproject.toml``).  Importing it at module scope
+used to hard-error collection of three test modules on environments without
+it.  This shim degrades gracefully instead:
+
+* with hypothesis installed, it re-exports the real ``given`` / ``settings``
+  / ``strategies`` untouched;
+* without it, property tests run against a small, deterministic sample drawn
+  from a seeded RNG — strictly weaker than hypothesis's shrinking search, but
+  far better than skipping the module (and collection never errors).
+
+Modules that use *other* hypothesis features than the ones shimmed here
+should call :func:`require_hypothesis` (a ``pytest.importorskip`` wrapper)
+instead.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_MAX_EXAMPLES = 8  # cap: deterministic sweeps stay fast
+    _FALLBACK_SEED = 0x2006_1523  # arXiv:2006.15234
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def decorate(fn):
+            def runner():
+                # settings() may sit above OR below given(); check both the
+                # wrapper and the wrapped function for the stamped cap.
+                n = getattr(runner, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples",
+                                    _FALLBACK_MAX_EXAMPLES))
+                rng = random.Random(_FALLBACK_SEED)
+                for _ in range(n):
+                    fn(**{name: s.sample(rng)
+                          for name, s in strategies.items()})
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return decorate
+
+    def settings(*, max_examples=None, **_ignored):
+        def decorate(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = min(max_examples,
+                                              _FALLBACK_MAX_EXAMPLES)
+            return fn
+
+        return decorate
+
+
+def require_hypothesis():
+    """``pytest.importorskip`` guard for tests needing real hypothesis."""
+    return pytest.importorskip("hypothesis")

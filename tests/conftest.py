@@ -1,0 +1,5 @@
+"""Shared pytest setup: make tests/ importable (for _hypothesis_compat)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,222 @@
+"""Planner cache semantics, fused-engine equivalence, Pallas-gram dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core import orthogonalize as orth
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD, einsumsvd, truncation_error
+from repro.core.rsvd import ImplicitOperator
+from repro.core.bmps import BMPS, contract_twolayer
+from repro.core.peps import random_peps
+
+
+def _network(key, d1=3, d2=4, d3=5, d4=3, dtype=jnp.complex128):
+    k = jax.random.split(key, 4)
+    a = jax.random.normal(k[0], (d1, d2, d3))
+    b = jax.random.normal(k[2], (d3, d4, d1))
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        a = a + 1j * jax.random.normal(k[1], (d1, d2, d3))
+        b = b + 1j * jax.random.normal(k[3], (d3, d4, d1))
+    return [a.astype(dtype), b.astype(dtype)], ["abc", "cde"], "ab", "de"
+
+
+@pytest.fixture(autouse=True)
+def _fresh_planner():
+    planner.clear()
+    yield
+    planner.clear()
+
+
+# ---------------------------------------------------------------- paths ----
+
+def test_path_cache_hit_miss_semantics():
+    tensors, subs, row, col = _network(jax.random.PRNGKey(0))
+    op = ImplicitOperator(tensors, subs, row, col)
+    q = jax.random.normal(jax.random.PRNGKey(1), op.col_shape + (3,)).astype(op.dtype)
+
+    planner.reset_stats()
+    op.matvecs(q)
+    s1 = planner.stats()
+    assert s1["path_misses"] == 1 and s1["path_hits"] == 0
+
+    op.matvecs(q)  # same signature -> cached
+    s2 = planner.stats()
+    assert s2["path_misses"] == 1 and s2["path_hits"] == 1
+
+    # different sketch width -> different shapes -> a fresh miss
+    q5 = jax.random.normal(jax.random.PRNGKey(2), op.col_shape + (5,)).astype(op.dtype)
+    op.matvecs(q5)
+    s3 = planner.stats()
+    assert s3["path_misses"] == 2
+
+    # rmatvecs is a different expression -> its own entry
+    p = jax.random.normal(jax.random.PRNGKey(3), op.row_shape + (3,)).astype(op.dtype)
+    op.rmatvecs(p)
+    assert planner.stats()["path_misses"] == 3
+
+
+def test_path_cache_disabled_restores_seed_behavior():
+    tensors, subs, row, col = _network(jax.random.PRNGKey(0))
+    op = ImplicitOperator(tensors, subs, row, col)
+    q = jax.random.normal(jax.random.PRNGKey(1), op.col_shape + (3,)).astype(op.dtype)
+    with planner.disabled():
+        op.matvecs(q)
+        op.matvecs(q)
+    s = planner.stats()
+    assert s["path_uncached"] == 2 and s["path_misses"] == 0
+
+
+def test_cached_einsum_matches_plain_einsum():
+    a = jax.random.normal(jax.random.PRNGKey(0), (6, 7, 8))
+    b = jax.random.normal(jax.random.PRNGKey(1), (8, 7, 5))
+    want = jnp.einsum("abc,cbd->ad", a, b, optimize="optimal")
+    got = planner.cached_einsum("abc,cbd->ad", a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-12)
+
+
+# ---------------------------------------------------------------- fused ----
+
+def test_fused_cache_hit_miss_semantics():
+    tensors, subs, row, col = _network(jax.random.PRNGKey(4))
+    op = ImplicitOperator(tensors, subs, row, col)
+    planner.reset_stats()
+    planner.fused_randomized_svd(op, 4, key=jax.random.PRNGKey(0))
+    assert planner.stats()["fused_misses"] == 1
+    planner.fused_randomized_svd(op, 4, key=jax.random.PRNGKey(1))
+    s = planner.stats()
+    assert s["fused_misses"] == 1 and s["fused_hits"] == 1
+    # different rank -> different solver config -> new compiled entry
+    planner.fused_randomized_svd(op, 6, key=jax.random.PRNGKey(0))
+    assert planner.stats()["fused_misses"] == 2
+
+
+def test_fused_cache_keyed_on_gram_backend():
+    """set_gram_backend must not be ignored for already-compiled signatures:
+    the backend mode is a trace-time decision, so it is part of the key."""
+    tensors, subs, row, col = _network(jax.random.PRNGKey(4))
+    op = ImplicitOperator(tensors, subs, row, col)
+    planner.reset_stats()
+    prev = orth.set_gram_backend("dense")
+    try:
+        planner.fused_randomized_svd(op, 4, key=jax.random.PRNGKey(0))
+        orth.set_gram_backend("auto")
+        planner.fused_randomized_svd(op, 4, key=jax.random.PRNGKey(0))
+    finally:
+        orth.set_gram_backend(prev)
+    s = planner.stats()
+    assert s["fused_misses"] == 2 and s["fused_hits"] == 0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.complex128])
+def test_fused_matches_unfused(dtype):
+    tensors, subs, row, col = _network(jax.random.PRNGKey(5), dtype=dtype)
+    key = jax.random.PRNGKey(11)
+    for rank in (3, 6):
+        uf, sf, vf = RandomizedSVD(fused=True)(
+            ImplicitOperator(tensors, subs, row, col), rank, key=key)
+        uu, su, vu = RandomizedSVD(fused=False)(
+            ImplicitOperator(tensors, subs, row, col), rank, key=key)
+        rec_f = np.einsum("abk,k,kde->abde", np.asarray(uf), np.asarray(sf),
+                          np.asarray(vf))
+        rec_u = np.einsum("abk,k,kde->abde", np.asarray(uu), np.asarray(su),
+                          np.asarray(vu))
+        err = (np.linalg.norm(rec_f - rec_u)
+               / max(np.linalg.norm(rec_u), 1e-300))
+        assert err <= 1e-5, err
+
+
+def test_fused_einsumsvd_against_direct_reference():
+    """End-to-end: fused implicit refactorization ~= dense SVD truncation."""
+    tensors, subs, row, col = _network(jax.random.PRNGKey(6))
+    op = ImplicitOperator(tensors, subs, row, col)
+    rank = min(op.row_size, op.col_size)
+    u, s, v = einsumsvd(RandomizedSVD(niter=6, fused=True), tensors, subs,
+                        row, col, rank, absorb="none",
+                        key=jax.random.PRNGKey(7))
+    assert float(truncation_error(op.dense(), u, s, v)) < 1e-8
+
+
+def test_contract_twolayer_fused_matches_unfused():
+    state = random_peps(3, 3, 2, jax.random.PRNGKey(8))
+    key = jax.random.PRNGKey(9)
+    val_f = contract_twolayer(state.sites, state.sites,
+                              BMPS.randomized(8, fused=True), key)
+    val_u = contract_twolayer(state.sites, state.sites,
+                              BMPS.randomized(8, fused=False), key)
+    np.testing.assert_allclose(np.asarray(val_f), np.asarray(val_u),
+                               rtol=1e-5)
+    misses_first = planner.stats()["fused_misses"]
+    assert misses_first > 0
+    # a repeated sweep presents only already-seen signatures: all hits
+    contract_twolayer(state.sites, state.sites,
+                      BMPS.randomized(8, fused=True), key)
+    s = planner.stats()
+    assert s["fused_misses"] == misses_first
+    assert s["fused_hits"] >= misses_first
+
+
+# ----------------------------------------------------------- gram kernel ----
+
+def test_pallas_gram_matches_dense_qr_tall_skinny():
+    """Forced-Pallas gram_qr vs dense reshape-QR on a tall-skinny operand."""
+    a = jax.random.normal(jax.random.PRNGKey(10), (512, 24), jnp.float32)
+    prev = orth.set_gram_backend("pallas")
+    try:
+        orth.reset_gram_dispatch_stats()
+        q_p, r_p = orth.gram_qr(a, 1)
+        assert orth.gram_dispatch_stats()["pallas_gram_calls"] == 1
+    finally:
+        orth.set_gram_backend(prev)
+    q_d, r_d = orth.reshape_qr(a, 1)
+    # Q from gram vs LAPACK QR differ by column signs/rotations; compare the
+    # projector Q Q^H and the reconstruction instead.
+    rec_p = np.asarray(q_p) @ np.asarray(r_p)
+    np.testing.assert_allclose(rec_p, np.asarray(a), atol=5e-4)
+    proj_p = np.asarray(q_p) @ np.asarray(q_p).T
+    proj_d = np.asarray(q_d) @ np.asarray(q_d).T
+    np.testing.assert_allclose(proj_p, proj_d, atol=5e-3)
+    qtq = np.asarray(q_p).T @ np.asarray(q_p)
+    np.testing.assert_allclose(qtq, np.eye(24), atol=5e-3)
+
+
+def test_pallas_gram_complex64():
+    key = jax.random.PRNGKey(12)
+    k1, k2 = jax.random.split(key)
+    a = (jax.random.normal(k1, (256, 12)) + 1j * jax.random.normal(k2, (256, 12))
+         ).astype(jnp.complex64)
+    prev = orth.set_gram_backend("pallas")
+    try:
+        q, r = orth.gram_qr(a, 1)
+    finally:
+        orth.set_gram_backend(prev)
+    rec = np.asarray(q) @ np.asarray(r)
+    np.testing.assert_allclose(rec, np.asarray(a), atol=1e-3)
+    qtq = np.conj(np.asarray(q)).T @ np.asarray(q)
+    np.testing.assert_allclose(qtq, np.eye(12), atol=5e-3)
+
+
+def test_gram_dispatch_gate_keeps_f64_dense():
+    """float64 operands must never route to the f32-accumulating kernel."""
+    a = jax.random.normal(jax.random.PRNGKey(13), (4096, 8), jnp.float64)
+    prev = orth.set_gram_backend("pallas")  # even when forced
+    try:
+        orth.reset_gram_dispatch_stats()
+        orth.gram_qr(a, 1)
+        s = orth.gram_dispatch_stats()
+        assert s["pallas_gram_calls"] == 0 and s["dense_gram_calls"] == 1
+    finally:
+        orth.set_gram_backend(prev)
+
+
+def test_gram_auto_mode_is_dense_on_cpu():
+    a = jax.random.normal(jax.random.PRNGKey(14), (8192, 16), jnp.float32)
+    assert orth.set_gram_backend("auto") in ("auto", "pallas", "dense")
+    orth.reset_gram_dispatch_stats()
+    orth.gram_qr(a, 1)
+    s = orth.gram_dispatch_stats()
+    if jax.default_backend() == "tpu":
+        assert s["pallas_gram_calls"] == 1
+    else:
+        assert s["dense_gram_calls"] == 1
