@@ -12,3 +12,7 @@ test-fast:
 .PHONY: bench-planner
 bench-planner:
 	PYTHONPATH=src $(PY) benchmarks/bench_planner.py
+
+.PHONY: bench-full-update
+bench-full-update:
+	PYTHONPATH=src $(PY) benchmarks/bench_full_update.py

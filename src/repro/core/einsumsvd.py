@@ -31,6 +31,10 @@ The hot path is plan-cached and fused, keyed by the **network signature**
   (``nbig >= 8 * nsmall``, small side <= 512), 32-bit, and a TPU backend is
   active; otherwise the dense reshape-free contraction runs (see
   ``orthogonalize.set_gram_backend``).
+
+The same engines seed the full update's ALS bond optimization
+(:mod:`repro.core.full_update`): the reduced gate-applied network is split
+here first, then refined in the neighborhood-environment metric.
 """
 from __future__ import annotations
 
@@ -128,6 +132,17 @@ def einsumsvd(
     u, s, v = option(op, rank, key)
     if absorb == "none":
         return u, s, v
+    return absorb_factors(u, s, v, absorb)
+
+
+def absorb_factors(u: jnp.ndarray, s: jnp.ndarray, v: jnp.ndarray,
+                   absorb: str = "both") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold the singular values into the factors (einsumsvd conventions).
+
+    ``absorb='both'`` splits ``sqrt(s)`` into each factor (the simple-update
+    gauge, also the ALS seed gauge of the full update); ``'left'``/``'right'``
+    put all of ``s`` on one side.  ``u``'s LAST and ``v``'s FIRST axis are
+    the shared bond."""
     if absorb == "both":
         sq = jnp.sqrt(s)
         return u * sq, sq[(slice(None),) + (None,) * (v.ndim - 1)] * v

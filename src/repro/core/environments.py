@@ -12,11 +12,13 @@ with the strip's bottom).
 """
 from __future__ import annotations
 
+import itertools
 from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import planner
 from repro.core.bmps import BMPS, _zipup_row_twolayer, trivial_twolayer_boundary
 
 
@@ -48,6 +50,83 @@ def top_environments(bra_rows, ket_rows, option: BMPS, key=None) -> List[List[jn
                                    option.chi, option.svd, keys[i])
         envs.append(svec)
     return envs
+
+
+# ---------------------------------------------------------------------------
+# Strip boundaries (the full update's left/right neighborhood environments)
+# ---------------------------------------------------------------------------
+#
+# A strip is [top_env; bra rows; ket rows; bottom_env] — the same object
+# ``expectation.strip_value`` contracts to a scalar.  Here we instead contract
+# only the columns left (or right) of a cut, leaving the horizontal bonds at
+# the cut open.  The boundary tensor's axes are
+#
+#     (top_bond, bra_bond_0, ket_bond_0, ..., bra_bond_{n-1}, ket_bond_{n-1},
+#      bottom_bond)
+#
+# for an n-row strip.  Combined with the cached ``row_environments`` these
+# give the two-site neighborhood environment of any lattice bond with one
+# short column sweep — no full-network recontraction per bond.
+
+def _absorb_strip_column(v, top_t, bra_ts, ket_ts, bot_t, from_left: bool):
+    """Absorb one strip column into a boundary tensor ``v``.
+
+    ``v`` holds the open bonds at the current cut (facing the column);
+    returns the boundary at the next cut.  All contractions run through the
+    planner's path cache (one cache entry per shape class, shared across
+    columns/sites/sweeps).
+    """
+    n = len(bra_ts)
+    counter = itertools.count(1)
+    fresh = lambda: next(counter)
+    v_labels = [fresh() for _ in range(2 * n + 2)]
+    args = [v, v_labels]
+    t_new = fresh()
+    up_bra, up_ket = fresh(), fresh()
+    top_lab = ([v_labels[0], up_bra, up_ket, t_new] if from_left else
+               [t_new, up_bra, up_ket, v_labels[0]])
+    args += [top_t, top_lab]
+    out = [t_new]
+    for r in range(n):
+        p = fresh()
+        d_bra, d_ket = fresh(), fresh()
+        n_bra, n_ket = fresh(), fresh()
+        if from_left:
+            args += [bra_ts[r].conj(), [p, up_bra, v_labels[1 + 2 * r], d_bra, n_bra]]
+            args += [ket_ts[r], [p, up_ket, v_labels[2 + 2 * r], d_ket, n_ket]]
+        else:
+            args += [bra_ts[r].conj(), [p, up_bra, n_bra, d_bra, v_labels[1 + 2 * r]]]
+            args += [ket_ts[r], [p, up_ket, n_ket, d_ket, v_labels[2 + 2 * r]]]
+        out += [n_bra, n_ket]
+        up_bra, up_ket = d_bra, d_ket
+    b_new = fresh()
+    bot_lab = ([v_labels[-1], up_bra, up_ket, b_new] if from_left else
+               [b_new, up_bra, up_ket, v_labels[-1]])
+    args += [bot_t, bot_lab]
+    out.append(b_new)
+    args.append(out)
+    return planner.int_einsum(*args)
+
+
+def strip_boundary(top_env, bottom_env, bra_rows, ket_rows, cut: int,
+                   from_left: bool):
+    """Boundary tensor of a strip at column ``cut``.
+
+    ``from_left=True`` contracts columns ``[0, cut)`` (open bonds face right);
+    ``from_left=False`` contracts columns ``[cut, ncol)`` (open bonds face
+    left).  Strips are at most two rows high in practice, so the boundary
+    stays exact (no truncation) and polynomial."""
+    n = len(bra_rows)
+    ncol = len(top_env)
+    dtype = top_env[0].dtype
+    v = jnp.ones((1,) * (2 * n + 2), dtype=dtype)
+    cols = range(cut) if from_left else range(ncol - 1, cut - 1, -1)
+    for c in cols:
+        v = _absorb_strip_column(v, top_env[c],
+                                 [row[c] for row in bra_rows],
+                                 [row[c] for row in ket_rows],
+                                 bottom_env[c], from_left)
+    return v
 
 
 def row_environments(state, option: BMPS, key=None) -> Tuple[List, List]:

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planner
 from repro.core.bmps import BMPS
 from repro.core.environments import row_environments, top_environments, \
     trivial_env, _flip_rows
@@ -96,7 +97,9 @@ def strip_value(top_env: List[jnp.ndarray], bottom_env: List[jnp.ndarray],
                      (not kappa_open and n_kappa_here == 1)
         out_labels = out_core + ([kappa_label] if open_after else [])
         args.append(out_labels)
-        v = jnp.einsum(*args, optimize="optimal")
+        # plan-cached: every column of every strip with the same shape class
+        # shares one contraction path (see planner.int_einsum)
+        v = planner.int_einsum(*args)
         v_core, kappa_open = out_core, open_after
 
     return v.reshape(())

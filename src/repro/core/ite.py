@@ -1,9 +1,17 @@
 """Imaginary time evolution (paper Sections II-D1, VI-D1).
 
 TEBD with first-order Trotter-Suzuki: one ITE step applies
-``exp(-tau * c_i * H_i)`` for every local term of the Hamiltonian, using the
-(truncating) two-site simple update.  Diagonal (next-nearest-neighbour)
-terms are routed with SWAP chains automatically by ``apply_operator``.
+``exp(-tau * c_i * H_i)`` for every local term of the Hamiltonian, using a
+(truncating) two-site update — the QR simple update (``QRUpdate``), the
+direct einsumsvd update (``DirectUpdate``), or the environment-aware full
+update (``FullUpdate``, Lubasch et al. arXiv:1405.3259).  Diagonal
+(next-nearest-neighbour) terms are routed with SWAP chains automatically by
+``apply_operator``.
+
+With ``FullUpdate`` the loop maintains cached top/bottom row environments
+and refreshes them every ``update.env_refresh_every`` gate applications;
+every bond truncation then costs only a strip contraction + a jit-fused
+ALS.  The per-bond truncation fidelities are aggregated into the result.
 
 The Rayleigh quotient <psi|H|psi>/<psi|psi> (via cached-environment
 expectation) tracks convergence to the ground state.
@@ -21,9 +29,11 @@ from repro.core import gates as G
 from repro.core import planner
 from repro.core import statevector as sv
 from repro.core.bmps import BMPS
+from repro.core.environments import row_environments
 from repro.core.expectation import expectation
 from repro.core.observable import Observable
-from repro.core.peps import PEPS, QRUpdate, apply_operator, normalize_sites
+from repro.core.peps import (FullUpdate, PEPS, apply_operator, check_update,
+                             normalize_sites)
 
 
 def trotter_moments(obs: Observable, tau: float):
@@ -44,6 +54,11 @@ class ITEResult:
     # evolution loop re-applies the same Trotter moments every step, so
     # after step 1 the einsumsvd engine should be all cache hits.
     planner_stats: Optional[dict] = None
+    # FullUpdate only: per measurement point, the worst (minimum) bond
+    # truncation fidelity observed since the previous measurement — the
+    # cheap environment-metric estimate |<ab|E|theta>|^2 normalized (see
+    # repro.core.full_update).  None for QRUpdate/DirectUpdate runs.
+    fidelities: Optional[List[float]] = None
 
 
 def ite_run(
@@ -51,22 +66,48 @@ def ite_run(
     obs: Observable,
     tau: float,
     steps: int,
-    update: QRUpdate,
+    update,
     contract: BMPS,
     measure_every: int = 10,
     key=None,
     callback: Optional[Callable] = None,
 ) -> ITEResult:
-    """Run TEBD imaginary time evolution on a PEPS."""
+    """Run TEBD imaginary time evolution on a PEPS.
+
+    ``update`` selects the two-site truncation tier: :class:`QRUpdate`
+    (simple update), :class:`DirectUpdate`, or :class:`FullUpdate`
+    (environment-aware; row environments are cached and refreshed every
+    ``update.env_refresh_every`` gate applications)."""
+    check_update(update)
     if key is None:
         key = jax.random.PRNGKey(2020)
     moments = trotter_moments(obs, tau)
     energies, measured_at = [], []
     planner_before = planner.stats()
+
+    is_full = isinstance(update, FullUpdate)
+    fidelities: Optional[List[float]] = [] if is_full else None
+    envs = None
+    since_refresh = 0
+    if is_full:
+        from repro.core import full_update as _fu
+        _fu.drain_fidelities()  # start the log window fresh
+
     for step in range(steps):
         for g, sites in moments:
             key, sub = jax.random.split(key)
-            state = apply_operator(state, g, sites, update, key=sub)
+            if is_full and len(sites) == 2:
+                s0, s1 = state.coords(sites[0]), state.coords(sites[1])
+                if (envs is None or since_refresh >= update.env_refresh_every
+                        or not _fu.envs_compatible(state, s0, s1, envs)):
+                    key, ek = jax.random.split(key)
+                    envs = row_environments(state, _fu.env_option(update), ek)
+                    since_refresh = 0
+            state = apply_operator(state, g, sites, update, key=sub, envs=envs)
+            since_refresh += 1
+        # environments survive normalize_sites (the positive-fixed metric is
+        # invariant under uniform rescales) and step boundaries — only the
+        # refresh cadence and bond-dimension growth invalidate them
         state = normalize_sites(state)
         if (step + 1) % measure_every == 0 or step == steps - 1:
             key, sub = jax.random.split(key)
@@ -74,10 +115,13 @@ def ite_run(
                                            key=sub)))
             energies.append(e)
             measured_at.append(step + 1)
+            if is_full:
+                window = _fu.drain_fidelities()
+                fidelities.append(min(window) if window else float("nan"))
             if callback is not None:
                 callback(step + 1, e, state)
     return ITEResult(state, energies, measured_at,
-                     planner.stats_since(planner_before))
+                     planner.stats_since(planner_before), fidelities)
 
 
 def ite_statevector(nrow: int, ncol: int, obs: Observable, tau: float,

@@ -4,11 +4,14 @@ Site tensor layout: ``(p, u, l, d, r)`` — physical, up, left, down, right.
 Boundary bonds have dimension 1.  Grid site ``(i, j)`` (row-major) holds the
 qubit ``i*ncol + j``.
 
-Two-site operator application implements both:
-* ``DirectUpdate`` — contract the full theta and einsumsvd it (Eq. 4), and
+Two-site operator application implements three accuracy tiers:
+* ``DirectUpdate`` — contract the full theta and einsumsvd it (Eq. 4),
 * ``QRUpdate``    — Alg. 1: QR both sites first (via the reshape-avoiding
   Gram factorization of Alg. 5, or LAPACK QR), einsumsvd the small Rs, and
   re-absorb the Q factors.  This is the O(d^2 r^5) path.
+* ``FullUpdate``  — environment-aware truncation (Lubasch et al.,
+  arXiv:1405.3259): the bond is ALS-optimized in the metric of the cached
+  two-site neighborhood environment (see :mod:`repro.core.full_update`).
 
 A scalar ``log_scale`` rides along with the state so that imaginary-time
 evolution can renormalize site tensors without losing track of amplitudes.
@@ -155,6 +158,54 @@ class QRUpdate:
     gram: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class FullUpdate:
+    """Environment-aware full update (Lubasch et al., arXiv:1405.3259).
+
+    The bond truncation is optimized in the metric of the two-site
+    neighborhood environment, extracted from cached row environments plus a
+    left/right strip contraction (see :mod:`repro.core.full_update`).  More
+    accurate than :class:`QRUpdate` at equal bond dimension; costs one
+    environment contraction + a jit-fused ALS per bond.
+
+    Parameters
+    ----------
+    rank:       truncated bond dimension.
+    svd:        einsumsvd engine for the ALS seed split (the simple-update
+                answer in the reduced gauge).
+    chi:        boundary bond dimension of the row environments.
+    env_svd:    einsumsvd engine for the environment sweeps.
+    als_iters:  fixed number of ALS sweeps (static; part of the jit
+                signature).
+    als_eps:    relative Tikhonov regularization of the ALS normal matrices.
+    positive:   hermitize + eigenvalue-clamp the bond environment (the
+                gauge/positive fix; strongly recommended).
+    env_refresh_every: in ``ite.ite_run``, refresh the cached row
+                environments every N gate applications (1 = before every
+                two-site gate; larger values reuse staler environments,
+                cluster-update style, for speed).  Independently of the
+                cadence, environments are always refreshed when a bond
+                dimension has grown since the cached sweep (see
+                ``full_update.envs_compatible``).
+    """
+    rank: int
+    svd: object = DirectSVD()
+    chi: int = 16
+    env_svd: object = DirectSVD()
+    als_iters: int = 6
+    als_eps: float = 1e-12
+    positive: bool = True
+    env_refresh_every: int = 1
+
+
+def check_update(update) -> None:
+    """Validate a two-site update option (single source of the accepted set)."""
+    if not isinstance(update, (DirectUpdate, QRUpdate, FullUpdate)):
+        raise TypeError(
+            f"unknown two-site update option {type(update).__name__!r}: "
+            "expected DirectUpdate, QRUpdate, or FullUpdate")
+
+
 # ---------------------------------------------------------------------------
 # Operator application
 # ---------------------------------------------------------------------------
@@ -187,7 +238,10 @@ def _two_site_horizontal(a, b, g, update, key):
         new_b = jnp.moveaxis(right, 0, 2)            # (m,y,U,D,R) -> (y,U,m,D,R)
         return new_a, new_b
 
-    assert isinstance(update, QRUpdate)
+    if not isinstance(update, QRUpdate):
+        check_update(update)  # FullUpdate never reaches here; reject the rest
+        raise TypeError(f"{type(update).__name__} cannot be applied without "
+                        "the whole-state context (internal dispatch error)")
     qr = gram_qr if update.gram else reshape_qr
     # Bring the small modes (p, k) last; QR over them.
     a_t = jnp.transpose(a, (1, 2, 3, 0, 4))          # (u,l,d,p,k)
@@ -209,7 +263,13 @@ def _two_site_horizontal(a, b, g, update, key):
 
 
 def _apply_two_site_adjacent(state: PEPS, g, s0: Tuple[int, int],
-                             s1: Tuple[int, int], update, key) -> PEPS:
+                             s1: Tuple[int, int], update, key,
+                             envs=None) -> PEPS:
+    if isinstance(update, FullUpdate):
+        # the neighborhood environment is orientation-specific, so the full
+        # update handles both orientations itself (no transpose trick)
+        from repro.core import full_update as _fu
+        return _fu.full_update_bond(state, g, s0, s1, update, key, envs=envs)
     (i0, j0), (i1, j1) = s0, s1
     g = jnp.asarray(g, dtype=state.dtype)
     new = state.copy()
@@ -219,7 +279,7 @@ def _apply_two_site_adjacent(state: PEPS, g, s0: Tuple[int, int],
         new.sites[i0][j0], new.sites[i1][j1] = na, nb
     elif i0 == i1 and j1 == j0 - 1:                   # horizontal, reversed
         gt = jnp.transpose(g, (1, 0, 3, 2))           # swap the two qubits
-        return _apply_two_site_adjacent(state, gt, s1, s0, update, key)
+        return _apply_two_site_adjacent(state, gt, s1, s0, update, key, envs)
     elif j0 == j1 and i1 == i0 + 1:                   # vertical, top-bottom
         # Conjugate by axis swaps: a's (d<->r), b's (u<->l) turn the vertical
         # bond into the canonical horizontal layout.
@@ -230,7 +290,7 @@ def _apply_two_site_adjacent(state: PEPS, g, s0: Tuple[int, int],
         new.sites[i1][j1] = jnp.transpose(nb, (0, 2, 1, 3, 4))
     elif j0 == j1 and i1 == i0 - 1:                   # vertical, reversed
         gt = jnp.transpose(g, (1, 0, 3, 2))
-        return _apply_two_site_adjacent(state, gt, s1, s0, update, key)
+        return _apply_two_site_adjacent(state, gt, s1, s0, update, key, envs)
     else:
         raise ValueError(f"sites {s0}, {s1} are not adjacent")
     return new
@@ -253,11 +313,17 @@ def _swap_path(s0: Tuple[int, int], s1: Tuple[int, int]) -> List[Tuple[int, int]
 
 
 def apply_operator(state: PEPS, g, flat_sites: Sequence[int],
-                   update: Optional[object] = None, key=None) -> PEPS:
+                   update: Optional[object] = None, key=None,
+                   envs=None) -> PEPS:
     """Apply a 1- or 2-site operator on arbitrary sites.
 
     Non-adjacent two-site operators are routed with SWAP chains (paper
     Section II-C1); each SWAP uses the same truncating update.
+
+    ``envs`` (FullUpdate only): cached ``(top, bottom)`` row environments to
+    truncate against; omitted, they are recomputed from the current state
+    per bond.  Along a SWAP chain the same environments are reused — they go
+    slightly stale as the chain progresses (cluster-update trade-off).
     """
     if key is None:
         key = jax.random.PRNGKey(np.bitwise_xor.reduce(
@@ -268,10 +334,11 @@ def apply_operator(state: PEPS, g, flat_sites: Sequence[int],
         raise ValueError("only 1- and 2-site operators are supported")
     if update is None:
         update = QRUpdate(rank=max(4, state.max_bond()))
+    check_update(update)
 
     s0, s1 = state.coords(flat_sites[0]), state.coords(flat_sites[1])
     if _adjacent(s0, s1):
-        return _apply_two_site_adjacent(state, g, s0, s1, update, key)
+        return _apply_two_site_adjacent(state, g, s0, s1, update, key, envs)
 
     # SWAP-chain routing: walk s1 next to s0, apply, walk back.
     path = _swap_path(s0, s1)
@@ -279,10 +346,13 @@ def apply_operator(state: PEPS, g, flat_sites: Sequence[int],
     keys = jax.random.split(key, 2 * len(path) + 1)
     ki = 0
     for a, b in zip(path[:-1], path[1:]):
-        state = _apply_two_site_adjacent(state, swap, a, b, update, keys[ki]); ki += 1
-    state = _apply_two_site_adjacent(state, g, s0, path[-1], update, keys[ki]); ki += 1
+        state = _apply_two_site_adjacent(state, swap, a, b, update, keys[ki],
+                                         envs); ki += 1
+    state = _apply_two_site_adjacent(state, g, s0, path[-1], update, keys[ki],
+                                     envs); ki += 1
     for a, b in zip(reversed(path[1:]), reversed(path[:-1])):
-        state = _apply_two_site_adjacent(state, swap, a, b, update, keys[ki]); ki += 1
+        state = _apply_two_site_adjacent(state, swap, a, b, update, keys[ki],
+                                         envs); ki += 1
     return state
 
 

@@ -143,6 +143,14 @@ def network_signature(subscripts: Sequence[str],
 # Layer 1: contraction-path cache
 # --------------------------------------------------------------------------
 
+def _path_optimizer(n_operands: int) -> str:
+    # "optimal" enumerates orderings factorially — fine for the <=6-tensor
+    # einsumsvd subnetworks, hopeless for the 8-10-tensor neighborhood
+    # environments of the full update.  opt_einsum's dynamic-programming
+    # search is exact w.r.t. contraction cost and scales to ~20 tensors.
+    return "optimal" if n_operands <= 6 else "dp"
+
+
 def contraction_path(expr: str, shapes: Tuple[Tuple[int, ...], ...]) -> list:
     """Optimal contraction path for ``expr`` over operands of ``shapes``.
 
@@ -151,7 +159,7 @@ def contraction_path(expr: str, shapes: Tuple[Tuple[int, ...], ...]) -> list:
     if not _CONFIG["path_cache"]:
         _COUNTERS["path_uncached"] += 1
         path, _ = opt_einsum.contract_path(expr, *shapes, shapes=True,
-                                           optimize="optimal")
+                                           optimize=_path_optimizer(len(shapes)))
         return path
     key = (expr, shapes)
     hit = _PATH_CACHE.get(key)
@@ -160,7 +168,7 @@ def contraction_path(expr: str, shapes: Tuple[Tuple[int, ...], ...]) -> list:
         return hit
     _COUNTERS["path_misses"] += 1
     path, _ = opt_einsum.contract_path(expr, *shapes, shapes=True,
-                                       optimize="optimal")
+                                       optimize=_path_optimizer(len(shapes)))
     _PATH_CACHE[key] = path
     return path
 
@@ -169,6 +177,78 @@ def cached_einsum(expr: str, *tensors: jnp.ndarray) -> jnp.ndarray:
     """``jnp.einsum`` along a plan-cached optimal path."""
     path = contraction_path(expr, tuple(tuple(t.shape) for t in tensors))
     return jnp.einsum(expr, *tensors, optimize=path)
+
+
+_INT_LABELS = "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ"
+
+
+def int_einsum(*args) -> jnp.ndarray:
+    """Interleaved-format einsum with integer labels, along a plan-cached path.
+
+    ``int_einsum(t0, labels0, t1, labels1, ..., out_labels)`` where each
+    ``labels`` is a sequence of hashable (integer) axis labels.  The labels
+    are remapped to a canonical subscript string so that structurally-equal
+    networks built from *different* label counters share one cache entry —
+    this is what lets the strip/environment contractions of
+    ``expectation.strip_value`` and ``full_update`` hit the path cache across
+    columns, sites and sweeps.
+
+    Falls back to ``jnp.einsum(..., optimize="auto")`` (uncached) if the
+    network uses more than 52 distinct labels.
+    """
+    *pairs, out = args
+    tensors = list(pairs[0::2])
+    labels = list(pairs[1::2])
+    mapping: Dict = {}
+
+    def lab(ls):
+        for l in ls:
+            if l not in mapping:
+                mapping[l] = _INT_LABELS[len(mapping)]
+        return "".join(mapping[l] for l in ls)
+
+    try:
+        expr = ",".join(lab(ls) for ls in labels) + "->" + lab(out)
+    except IndexError:  # > 52 distinct labels: interleaved fallback
+        _COUNTERS["path_uncached"] += 1
+        flat = []
+        for t, ls in zip(tensors, labels):
+            flat += [t, list(ls)]
+        flat.append(list(out))
+        return jnp.einsum(*flat, optimize="auto")
+    return cached_einsum(expr, *tensors)
+
+
+# --------------------------------------------------------------------------
+# Generic fused-function cache (shared by the rSVD engine and full update)
+# --------------------------------------------------------------------------
+
+def fused_fn(tag: str, signature: tuple, builder):
+    """Memoized compiled callable per ``(tag,) + signature``.
+
+    ``builder()`` is invoked once per distinct signature and should return a
+    (typically ``jax.jit``-wrapped) function; later calls with an equal
+    signature replay the cached callable.  Hits/misses tick the same
+    ``fused_*`` counters as :func:`fused_randomized_svd`, so benchmarks and
+    tests can assert cache behavior across *all* fused engines.  The caller
+    is responsible for folding every trace-time decision (shapes, dtypes,
+    static solver config, device backend) into ``signature``.
+
+    With fusion disabled (:func:`disabled` / :func:`configure`), the builder
+    result is neither cached nor counted — callers get a fresh (still
+    correct, typically uncompiled) function each time.
+    """
+    if not _CONFIG["fusion"]:
+        return builder()
+    key = (tag,) + tuple(signature)
+    fn = _FUSED_CACHE.get(key)
+    if fn is None:
+        _COUNTERS["fused_misses"] += 1
+        fn = builder()
+        _FUSED_CACHE[key] = fn
+    else:
+        _COUNTERS["fused_hits"] += 1
+    return fn
 
 
 # --------------------------------------------------------------------------

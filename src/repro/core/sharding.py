@@ -19,7 +19,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bmps import BMPS, contract_twolayer
 from repro.core.einsumsvd import RandomizedSVD
-from repro.core.peps import PEPS, QRUpdate, _apply_two_site_adjacent, random_peps
+from repro.core.peps import (FullUpdate, PEPS, QRUpdate,
+                             _apply_two_site_adjacent, random_peps)
 from repro.core import gates as G
 
 
@@ -95,22 +96,62 @@ def abstract_ensemble(cfg: PEPSConfig):
 # The two dry-run step functions (assignment: the paper's own technique)
 # ---------------------------------------------------------------------------
 
+def _evolve_layer(state: PEPS, key, upd, envs_fn=None) -> PEPS:
+    """iSWAP on all horizontal then vertical neighbour pairs with ``upd``.
+
+    ``envs_fn(state, key)``, when given, produces cached row environments
+    once per sweep direction (they go cluster-style stale within the sweep;
+    bond growth forces a per-bond refresh via ``envs_compatible``)."""
+    g = jnp.asarray(G.ISWAP, dtype=state.dtype)
+    nrow, ncol = state.nrow, state.ncol
+    for pairs in (
+        [((i, j), (i, j + 1)) for i in range(nrow)
+         for j in range(0, ncol - 1, 2)],
+        [((i, j), (i + 1, j)) for j in range(ncol)
+         for i in range(0, nrow - 1, 2)],
+    ):
+        envs = None
+        if envs_fn is not None:
+            key, ek = jax.random.split(key)
+            envs = envs_fn(state, ek)
+        for s0, s1 in pairs:
+            key, sub = jax.random.split(key)
+            state = _apply_two_site_adjacent(state, g, s0, s1, upd, sub, envs)
+    return state
+
+
 def evolve_step(state: PEPS, key) -> PEPS:
     """One TEBD layer: iSWAP on all horizontal + vertical neighbour pairs,
     QR-SVD simple update with Gram orthogonalization (Alg. 1 + Alg. 5)."""
     cfgd = state.sites[1][1].shape[4]  # interior bond dim
     upd = QRUpdate(rank=cfgd, svd=RandomizedSVD(niter=1, oversample=4))
-    g = jnp.asarray(G.ISWAP, dtype=state.dtype)
-    nrow, ncol = state.nrow, state.ncol
-    for i in range(nrow):
-        for j in range(0, ncol - 1, 2):
-            key, sub = jax.random.split(key)
-            state = _apply_two_site_adjacent(state, g, (i, j), (i, j + 1), upd, sub)
-    for j in range(ncol):
-        for i in range(0, nrow - 1, 2):
-            key, sub = jax.random.split(key)
-            state = _apply_two_site_adjacent(state, g, (i, j), (i + 1, j), upd, sub)
-    return state
+    return _evolve_layer(state, key, upd)
+
+
+def evolve_step_full(state: PEPS, key, chi_env: int = 8) -> PEPS:
+    """One TEBD layer with the environment-aware :class:`FullUpdate`.
+
+    Same gate pattern as :func:`evolve_step`, but every bond truncation is
+    ALS-optimized against the two-site neighborhood environment, which is
+    extracted from (possibly sharded) site tensors by plain einsum
+    contractions — GSPMD lowers contractions across sharded bonds to
+    collectives, so distributed sites feed the environment extraction with
+    no re-layout.  Row environments are computed once per sweep direction
+    and reused across the direction's bonds.  Safe under ``vmap`` (ensemble
+    axis): the fidelity log is skipped while tracing."""
+    from repro.core import full_update as _fu
+
+    bond = state.sites[1][1].shape[4]
+    upd = FullUpdate(rank=bond, chi=chi_env,
+                     svd=RandomizedSVD(niter=1, oversample=4),
+                     als_iters=2)
+    from repro.core.environments import row_environments
+    envs_fn = lambda s, k: row_environments(s, _fu.env_option(upd), k)
+    return _evolve_layer(state, key, upd, envs_fn)
+
+
+def batched_evolve_full(states: PEPS, keys, chi_env: int = 8) -> PEPS:
+    return jax.vmap(lambda s, k: evolve_step_full(s, k, chi_env))(states, keys)
 
 
 def carry_model_constraint(mesh: Mesh):
