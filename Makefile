@@ -16,3 +16,18 @@ bench-planner:
 .PHONY: bench-full-update
 bench-full-update:
 	PYTHONPATH=src $(PY) benchmarks/bench_full_update.py
+
+# Intra-state column-sharded contraction (8 virtual CPU devices).
+.PHONY: bench-distributed
+bench-distributed:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src $(PY) benchmarks/bench_distributed.py
+
+.PHONY: test-distributed
+test-distributed:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_distributed.py
+
+.PHONY: docs-check
+docs-check:
+	$(PY) tools/check_doc_links.py

@@ -1,0 +1,113 @@
+"""Column-sharded distributed boundary contraction scaling (ISSUE 4 tentpole).
+
+Two sweeps over ``norm_squared`` via the two-layer zip-up with a
+:class:`~repro.core.distributed.DistributedBMPS` option:
+
+* **weak scaling**  — fixed columns *per shard* (the lattice grows with the
+  shard count): the regime the paper's Section V targets, where one state is
+  too large for a single device.
+* **strong scaling** — fixed lattice, increasing shard count.
+
+Each row reports wall time, the speedup vs the 1-shard run of the same
+sweep, the relative deviation from the single-device ``BMPS`` value (must
+be <= 1e-10 — the distributed sweep is arithmetically identical), and the
+analytic halo traffic per row absorption
+(:func:`repro.core.distributed.halo_bytes_per_row`).
+
+NOTE on reading the numbers: under ``--xla_force_host_platform_device_count``
+the "devices" are virtual slices of one CPU, so wall-clock speedups are NOT
+expected — the sweeps validate the pipeline's dispatch/communication
+structure and pin the equivalence + comm-volume numbers.  Real scaling needs
+a real multi-chip mesh (see docs/distributed.md).
+
+Run:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/bench_distributed.py
+(or ``make bench-distributed``).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+
+from benchmarks.common import SCALE, emit, emit_info, save_rows, timeit
+from repro.core.bmps import BMPS, norm_squared
+from repro.core.distributed import DistributedBMPS, halo_bytes_per_row
+from repro.core.peps import PEPS, random_peps
+
+# benchmarks/run.py skips this suite (instead of crashing the sweep) when
+# fewer devices are available; standalone runs proceed with a warning and
+# round-robin shard wrapping.
+REQUIRES_DEVICES = 8
+
+
+def _state(nrow, ncol, bond=2, scale=2.2):
+    s = random_peps(nrow, ncol, bond, jax.random.PRNGKey(3))
+    return PEPS([[t * scale for t in row] for row in s.sites])
+
+
+def _measure(tag, label, state, opt, base_t, key):
+    """Time one sharded contraction; verify the 1e-10 equivalence first."""
+    ref = complex(norm_squared(state, BMPS(opt.chi, opt.svd), key))
+    val = complex(norm_squared(state, opt, key))
+    rel = abs(val - ref) / max(abs(ref), 1e-300)
+    assert rel <= 1e-10, (tag, label, rel)
+    t = timeit(lambda: norm_squared(state, opt, key), repeats=3, warmup=1)
+    halo = halo_bytes_per_row(state, opt)
+    # efficiency: 1-shard time on the SAME lattice / p-shard time — the
+    # honest metric for both sweeps (weak scaling grows the lattice with p,
+    # so comparing against the p=1 *entry* would be meaningless)
+    eff = "" if base_t is None else f"efficiency={base_t / t:.2f};"
+    emit(f"distributed/{tag}/{label}", t,
+         f"{eff}rel_err={rel:.1e};halo_bytes_per_row={halo}")
+    return t
+
+
+def main():
+    n_dev = len(jax.devices())
+    if n_dev < REQUIRES_DEVICES:
+        emit_info("distributed/devices",
+                  f"only {n_dev} devices (want {REQUIRES_DEVICES}); shards "
+                  "wrap round-robin — scaling numbers are not meaningful")
+    shard_counts = [1, 2, 4, 8]
+    nrow, bond, chi = (6, 2, 16) if SCALE == "small" else (8, 3, 32)
+    cols_per_shard = 2
+    key = jax.random.PRNGKey(1)
+
+    def opt_for(p, block):
+        return DistributedBMPS.randomized(chi, niter=2, oversample=4,
+                                          n_shards=p, block=block)
+
+    # weak scaling: lattice grows with the shard count (fixed cols/shard);
+    # each point's baseline is the 1-shard run of the SAME lattice
+    for p in shard_counts:
+        ncol = cols_per_shard * p
+        state = _state(nrow, ncol, bond)
+        base_t = timeit(lambda: norm_squared(state, opt_for(1, None), key),
+                        repeats=3, warmup=1)
+        _measure("weak", f"p{p}_ncol{ncol}", state, opt_for(p, None),
+                 base_t, key)
+
+    # strong scaling: fixed lattice, more shards (block-cyclic, width 1)
+    ncol = cols_per_shard * max(shard_counts)
+    state = _state(nrow, ncol, bond)
+    base_t = None
+    for p in shard_counts:
+        t = _measure("strong", f"p{p}_ncol{ncol}", state, opt_for(p, 1),
+                     base_t, key)
+        if base_t is None:
+            base_t = t
+
+    emit_info("distributed/config",
+              f"nrow={nrow};bond={bond};chi={chi};devices={n_dev};"
+              f"cols_per_shard={cols_per_shard}")
+
+
+if __name__ == "__main__":
+    main()
+    out = save_rows("bench_distributed.json")
+    print(f"# results saved to {out}", file=sys.stderr)

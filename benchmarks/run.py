@@ -16,19 +16,26 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_caching, bench_contraction, bench_evolution,
-                        bench_ite, bench_roofline, bench_rqc, bench_vqe)
+from benchmarks import (bench_caching, bench_contraction, bench_distributed,
+                        bench_evolution, bench_ite, bench_roofline, bench_rqc,
+                        bench_vqe)
 from benchmarks.common import emit_info, save_rows
 
 SUITES = {
-    "evolution": bench_evolution.main,      # Fig. 7
-    "contraction": bench_contraction.main,  # Fig. 8 / Table II
-    "caching": bench_caching.main,          # Fig. 9
-    "rqc": bench_rqc.main,                  # Fig. 10
-    "ite": bench_ite.main,                  # Fig. 13
-    "vqe": bench_vqe.main,                  # Fig. 14
-    "roofline": bench_roofline.main,        # Fig. 11/12 analogue
+    "evolution": bench_evolution,      # Fig. 7
+    "contraction": bench_contraction,  # Fig. 8 / Table II
+    "caching": bench_caching,          # Fig. 9
+    "rqc": bench_rqc,                  # Fig. 10
+    "ite": bench_ite,                  # Fig. 13
+    "vqe": bench_vqe,                  # Fig. 14
+    "roofline": bench_roofline,        # Fig. 11/12 analogue
+    "distributed": bench_distributed,  # paper Section V (ISSUE 4)
 }
+
+
+def _devices_available() -> int:
+    import jax
+    return len(jax.devices())
 
 
 def main() -> None:
@@ -40,9 +47,21 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = []
     for name in names:
+        mod = SUITES[name]
+        # A suite may declare REQUIRES_DEVICES; when the process has fewer
+        # (e.g. no XLA_FLAGS=--xla_force_host_platform_device_count=N), skip
+        # it with a message instead of crashing/failing the whole sweep.
+        need = getattr(mod, "REQUIRES_DEVICES", 1)
+        have = _devices_available()
+        if have < need:
+            emit_info(
+                f"{name}/SKIPPED",
+                f"needs {need} devices but only {have} available; rerun with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+            continue
         t0 = time.time()
         try:
-            SUITES[name]()
+            mod.main()
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)

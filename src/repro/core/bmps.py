@@ -11,8 +11,33 @@ Three contraction pipelines, all built on the zip-up ``einsumsvd``:
 * ``contract_exact_onelayer`` — no-truncation boundary contraction
   (exponential; reference for small grids).
 
-Boundary-MPS tensor layout: ``(l, d, r)`` — left bond, down (dangling), right
-bond.  Two-layer boundaries use ``(l, d_bra, d_ket, r)``.
+Leg ordering
+------------
+PEPS site tensors follow the canonical ``(p, u, l, d, r)`` convention — see
+the ASCII diagram in :mod:`repro.core.peps` (the single source of truth for
+leg ordering).  Boundary-MPS tensors produced here are
+
+* one-layer: ``(l, d, r)`` — left bond, down (dangling), right bond;
+* two-layer: ``(l, d_bra, d_ket, r)`` — the bra/ket pair axes stay separate.
+
+Shard-local kernels
+-------------------
+A zip-up row absorption is built from :func:`zipup_block` /
+:func:`zipup_block_twolayer`: each absorbs a *contiguous block of columns*
+into the boundary, taking the running carry tensor V from the block to its
+left and returning the carry for the block to its right.  ``_zipup_row*``
+run a whole row as one block (``first=last=True``);
+:mod:`repro.core.distributed` composes the same kernels across a device
+mesh, moving only the carry and one boundary tensor per block edge (the
+halo exchange).  Because the kernels are per-site identical to the
+single-device sweep — same einsumsvd subnetworks, same PRNG keys — the
+distributed contraction reproduces single-device values to rounding, and
+every shard replays the same planner cache entries.
+
+High-level entry points (``amplitude``/``norm_squared``/``inner`` and the
+``contract_*`` functions) accept either a :class:`BMPS` option or a
+:class:`repro.core.distributed.DistributedBMPS` option and dispatch
+accordingly.
 """
 from __future__ import annotations
 
@@ -58,24 +83,56 @@ def _keys(key, n):
     return jax.random.split(key, n)
 
 
+def _distributed_module(option):
+    """Return :mod:`repro.core.distributed` iff ``option`` is distributed.
+
+    The import is lazy (distributed composes this module's kernels);
+    anything that is neither a :class:`BMPS` nor a ``DistributedBMPS`` is a
+    caller bug and raises immediately instead of failing deep in a sweep."""
+    if isinstance(option, BMPS):
+        return None
+    from repro.core import distributed
+    if isinstance(option, distributed.DistributedBMPS):
+        return distributed
+    raise TypeError(
+        f"expected BMPS or DistributedBMPS contraction option, got {option!r}")
+
+
 # ---------------------------------------------------------------------------
 # One-layer: PEPS without physical indices, site tensors (u, l, d, r)
 # ---------------------------------------------------------------------------
 
-def _zipup_row(svec: List[jnp.ndarray], row: Sequence[jnp.ndarray], chi: int,
-               svd, key) -> List[jnp.ndarray]:
-    """Alg. 3: approximately apply one PEPS row (as an MPO) to the boundary
-    MPS ``svec``; zip-up with einsumsvd, truncating to ``chi``."""
-    n = len(svec)
-    keys = _keys(key, n)
-    # V0: contract S_0 (b,f,g) with O_0 (f,c,h,k); left bonds b,c are dim 1.
-    s0, o0 = svec[0], row[0]
-    v = jnp.einsum("bfg,fchk->bchgk", s0, o0)
-    b, c = v.shape[0], v.shape[1]
-    v = v.reshape(b * c, v.shape[2], v.shape[3], v.shape[4])  # (a, e, b', c')
+def zipup_block(v: Optional[jnp.ndarray], svec_block: Sequence[jnp.ndarray],
+                row_block: Sequence[jnp.ndarray], chi: int, svd,
+                keys: Sequence, first: bool, last: bool):
+    """Shard-local one-layer zip-up kernel over a contiguous column block.
+
+    Absorbs ``row_block`` (an MPO slice) into the matching boundary slice
+    ``svec_block``, threading the carry tensor ``v`` (axes ``(a, e, b, c)``:
+    truncated bond, dangling, boundary bond, MPO bond) through the block.
+    ``first`` blocks initialize the carry from column 0 (no truncation);
+    ``last`` blocks close it into the final boundary tensor.
+
+    Returns ``(out, carry)``: the einsumsvd at block-local column ``j``
+    emits the *output boundary tensor of the previous column*, so a block
+    covering columns ``[lo, hi)`` returns tensors for columns
+    ``[lo-1, hi-1)`` (plus column ``hi-1`` when ``last``) and the carry for
+    column ``hi`` (``None`` when ``last``).  ``keys[j]`` must be the row's
+    per-column key for the block's ``j``-th column — the orchestration
+    (single-device or distributed) slices one row-level key split so both
+    execute identical arithmetic.
+    """
     out: List[jnp.ndarray] = []
-    for j in range(1, n):
-        sj, oj = svec[j], row[j]
+    j0 = 0
+    if first:
+        # V0: contract S_0 (b,f,g) with O_0 (f,c,h,k); left bonds b,c are dim 1.
+        s0, o0 = svec_block[0], row_block[0]
+        v = jnp.einsum("bfg,fchk->bchgk", s0, o0)
+        b, c = v.shape[0], v.shape[1]
+        v = v.reshape(b * c, v.shape[2], v.shape[3], v.shape[4])  # (a, e, b', c')
+        j0 = 1
+    for j in range(j0, len(svec_block)):
+        sj, oj = svec_block[j], row_block[j]
         left, right = einsumsvd(
             svd,
             [v, sj, oj],
@@ -86,9 +143,20 @@ def _zipup_row(svec: List[jnp.ndarray], row: Sequence[jnp.ndarray], chi: int,
         out.append(left)                       # (a, e, m) == (l, d, r)
         # right: (m, h, g, k) == next V's (a, e, b, c)
         v = right
-    # last V: right bonds g,k are dim 1
-    m, h = v.shape[0], v.shape[1]
-    out.append(v.reshape(m, h, v.shape[2] * v.shape[3]))
+    if last:
+        # last V: right bonds g,k are dim 1
+        m, h = v.shape[0], v.shape[1]
+        out.append(v.reshape(m, h, v.shape[2] * v.shape[3]))
+        v = None
+    return out, v
+
+
+def _zipup_row(svec: List[jnp.ndarray], row: Sequence[jnp.ndarray], chi: int,
+               svd, key) -> List[jnp.ndarray]:
+    """Alg. 3: approximately apply one PEPS row (as an MPO) to the boundary
+    MPS ``svec``; zip-up with einsumsvd, truncating to ``chi``."""
+    out, _ = zipup_block(None, svec, row, chi, svd, _keys(key, len(svec)),
+                         first=True, last=True)
     return out
 
 
@@ -104,6 +172,9 @@ def _mps_to_scalar(svec: List[jnp.ndarray]) -> jnp.ndarray:
 def contract_onelayer(rows: Sequence[Sequence[jnp.ndarray]], option: BMPS,
                       key=None) -> jnp.ndarray:
     """Alg. 2: contract an (u,l,d,r)-site PEPS to a scalar."""
+    dist = _distributed_module(option)
+    if dist is not None:
+        return dist.contract_onelayer(rows, option, key)
     nrow = len(rows)
     keys = _keys(key, max(nrow, 2))
     # initial boundary MPS = row 0 with u squeezed: (l, d, r)
@@ -146,24 +217,35 @@ def merge_layers(bra_rows, ket_rows) -> List[List[jnp.ndarray]]:
 # Two-layer: <bra|ket> with layers kept implicit (two-layer IBMPS)
 # ---------------------------------------------------------------------------
 
-def _zipup_row_twolayer(svec: List[jnp.ndarray], bra_row, ket_row, chi, svd,
-                        key, constrain_carry=None) -> List[jnp.ndarray]:
-    """Boundary tensors (a, e1, e2, b, ...) are truncated; the row's pair
-    bonds (c1,c2 / k1,k2) stay separate — the implicit structure that gives
-    two-layer IBMPS its complexity edge (Table II)."""
-    n = len(svec)
-    keys = _keys(key, n)
-    tb0, tk0 = bra_row[0].conj(), ket_row[0]
-    s0 = svec[0]
-    # S_0:(b,f1,f2,g), bra:(p,f1,c1,h1,k1), ket:(p,f2,c2,h2,k2); b,c1,c2 dim 1
-    v = jnp.einsum("bfFg,pfchk,pFCHK->bcChHgkK", s0, tb0, tk0, optimize="optimal")
-    sh = v.shape
-    v = v.reshape(sh[0] * sh[1] * sh[2], sh[3], sh[4], sh[5], sh[6], sh[7])
-    # v: (a, e1, e2, b, c1, c2)
+def zipup_block_twolayer(v: Optional[jnp.ndarray],
+                         svec_block: Sequence[jnp.ndarray],
+                         bra_block, ket_block, chi: int, svd,
+                         keys: Sequence, first: bool, last: bool,
+                         constrain_carry=None):
+    """Shard-local two-layer zip-up kernel over a contiguous column block.
+
+    The two-layer sibling of :func:`zipup_block`; identical block/carry
+    semantics, with carry axes ``(a, e1, e2, b, c1, c2)`` (truncated bond,
+    bra/ket dangling, boundary bond, bra/ket pair bonds).  Boundary tensors
+    are truncated; the row's pair bonds (c1,c2 / k1,k2) stay separate — the
+    implicit structure that gives two-layer IBMPS its complexity edge
+    (Table II).  The carry is the only tensor a distributed sweep ships
+    between neighboring shards (the forward halo)."""
     out: List[jnp.ndarray] = []
-    for j in range(1, n):
-        sj = svec[j]
-        tb, tk = bra_row[j].conj(), ket_row[j]
+    j0 = 0
+    if first:
+        tb0, tk0 = bra_block[0].conj(), ket_block[0]
+        s0 = svec_block[0]
+        # S_0:(b,f1,f2,g), bra:(p,f1,c1,h1,k1), ket:(p,f2,c2,h2,k2); b,c1,c2 dim 1
+        v = jnp.einsum("bfFg,pfchk,pFCHK->bcChHgkK", s0, tb0, tk0,
+                       optimize="optimal")
+        sh = v.shape
+        v = v.reshape(sh[0] * sh[1] * sh[2], sh[3], sh[4], sh[5], sh[6], sh[7])
+        # v: (a, e1, e2, b, c1, c2)
+        j0 = 1
+    for j in range(j0, len(svec_block)):
+        sj = svec_block[j]
+        tb, tk = bra_block[j].conj(), ket_block[j]
         left, right = einsumsvd(
             svd,
             [v, sj, tb, tk],
@@ -175,9 +257,20 @@ def _zipup_row_twolayer(svec: List[jnp.ndarray], bra_row, ket_row, chi, svd,
         v = right                              # (m, h1, h2, g, k1, k2)
         if constrain_carry is not None:
             v = constrain_carry(v)
-    m = v.shape[0]
-    out.append(v.reshape(m, v.shape[1], v.shape[2],
-                         v.shape[3] * v.shape[4] * v.shape[5]))
+    if last:
+        m = v.shape[0]
+        out.append(v.reshape(m, v.shape[1], v.shape[2],
+                             v.shape[3] * v.shape[4] * v.shape[5]))
+        v = None
+    return out, v
+
+
+def _zipup_row_twolayer(svec: List[jnp.ndarray], bra_row, ket_row, chi, svd,
+                        key, constrain_carry=None) -> List[jnp.ndarray]:
+    """One full row absorption = :func:`zipup_block_twolayer` as one block."""
+    out, _ = zipup_block_twolayer(None, svec, bra_row, ket_row, chi, svd,
+                                  _keys(key, len(svec)), first=True, last=True,
+                                  constrain_carry=constrain_carry)
     return out
 
 
@@ -212,6 +305,9 @@ def contract_twolayer(bra_rows, ket_rows, option: BMPS, key=None) -> jnp.ndarray
     is conjugated internally.  The sweep starts from a trivial boundary so the
     FIRST row is zip-up-truncated as well — the boundary bond never exceeds
     chi (the merged-pair r^4 init the naive path would carry is avoided)."""
+    dist = _distributed_module(option)
+    if dist is not None:
+        return dist.contract_twolayer(bra_rows, ket_rows, option, key)
     nrow = len(bra_rows)
     keys = _keys(key, max(nrow, 2))
     svec = trivial_twolayer_boundary(len(bra_rows[0]), bra_rows[0][0].dtype)

@@ -1,0 +1,388 @@
+"""Intra-state distributed boundary contraction (paper Section V).
+
+One large PEPS is sharded **column-block-cyclically** across a set of JAX
+devices and the boundary-MPS zip-up runs as a pipelined sweep over the
+column blocks: per row absorption, only *halo* tensors — the zip-up carry V
+moving right, and one boundary-MPS tensor moving back left per block edge —
+travel between neighboring shards.  Everything else (the PEPS columns, the
+boundary MPS, the einsumsvd work) stays shard-resident.
+
+This is the intra-state complement of :mod:`repro.core.sharding`, which
+parallelizes *ensembles* of independent states: here a single state too
+large (in chi or lattice size) for one device is spread over the mesh built
+by :func:`repro.launch.mesh.peps_mesh`.
+
+Layout
+------
+Columns are grouped into contiguous blocks of width ``block`` and blocks
+are dealt to the ``n_shards`` shards round-robin (block-cyclic), shard ``s``
+owning blocks ``s, s + n_shards, s + 2*n_shards, ...``::
+
+    ncol=8, n_shards=4, block=1          ncol=8, n_shards=4, block=2
+
+    col:    0  1  2  3  4  5  6  7      col:    0  1  2  3  4  5  6  7
+    shard:  0  1  2  3  0  1  2  3      shard:  0  0  1  1  2  2  3  3
+
+The default ``block=None`` gives one contiguous block per shard (pure block
+layout).  Smaller blocks cycle shards more often — more halo hops, but a
+finer-grained pipeline (see docs/distributed.md for the trade-off).
+
+Halo-exchange protocol (per row absorption)
+-------------------------------------------
+The zip-up of one PEPS row is sequential in the carry V, so a row absorption
+is executed block by block, and per block edge exactly two tensors cross
+shard boundaries:
+
+1. *forward*: the carry ``V`` (axes ``(a, e1, e2, b, c1, c2)`` two-layer) is
+   copied from the block's shard to the next block's shard;
+2. *backward*: the einsumsvd at the next block's first column emits the
+   boundary-MPS tensor of the *previous* block's last column, which is
+   copied back to its owner so every shard keeps exactly its own columns.
+
+JAX dispatch is asynchronous, so while shard ``s+1`` chews on row ``i``,
+shard ``s`` — whose columns for row ``i`` are already absorbed — can start
+row ``i+1`` as soon as its carry arrives: the sweep pipelines into a
+wavefront across rows without any explicit scheduling.
+
+Why not one big ``shard_map``?  The truncated zip-up is shape-polymorphic:
+boundary bonds ramp ``1 -> chi`` over the first rows and at the lattice
+edges, so the per-shard programs of one superstep have different operand
+shapes, which an SPMD region cannot express without zero-padding every bond
+to chi.  Padding changes the randomized-SVD sketches and breaks the
+bit-equality with the single-device sweep that this module guarantees (and
+tests enforce at 1e-10).  The explicit-placement pipeline keeps the
+arithmetic identical; an SPMD steady-state kernel with ``ppermute`` halos
+remains open for real accelerator meshes (see docs/distributed.md,
+"Design notes").
+
+Planner-cache contract
+----------------------
+The shard-local kernels are the *same* per-site einsumsvd subnetworks as
+the single-device sweep, so their planner signatures — which already
+contain the shard-local operand shapes (the block's column tensors) and the
+halo dims (the carry V's axes) — are blocking-invariant: every shard
+replays the one compiled refactorization per interior-site shape class that
+the single-device sweep built (`tests/test_distributed.py` asserts a 100%
+fused-cache hit rate for a sharded sweep after a single-device warm-up).
+JAX then specializes that one traced executable per device placement
+internally.
+
+Equivalence guarantee
+---------------------
+For any ``(n_shards, block)``, the distributed sweep performs the identical
+sequence of einsumsvd calls with identical operands and PRNG keys as the
+single-device ``contract_*`` path — blocking only decides *where* each call
+runs.  Sharded ``norm_squared`` / ``amplitude`` / ``expectation`` therefore
+match single-device values to rounding (<= 1e-10 enforced in tests).
+
+Usage: construct a :class:`DistributedBMPS` and pass it anywhere a
+:class:`~repro.core.bmps.BMPS` is accepted::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8  # CPU validation
+
+    mesh = peps_mesh(n_col_shards=8)
+    opt = DistributedBMPS.for_mesh(mesh, chi=16)
+    norm_squared(state, opt)        # == norm_squared(state, BMPS(16)) to 1e-10
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bmps import _keys, zipup_block, zipup_block_twolayer
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+
+
+# ---------------------------------------------------------------------------
+# Column layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ColumnLayout:
+    """Block-cyclic assignment of ``ncol`` columns to ``n_shards`` shards."""
+    ncol: int
+    n_shards: int
+    block: int
+
+    def __post_init__(self):
+        if self.ncol < 1 or self.n_shards < 1 or self.block < 1:
+            raise ValueError(f"bad layout {self!r}")
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-self.ncol // self.block)
+
+    def block_columns(self, b: int) -> range:
+        return range(b * self.block, min((b + 1) * self.block, self.ncol))
+
+    @property
+    def blocks(self) -> List[Tuple[int, range]]:
+        """``[(shard, columns), ...]`` in left-to-right sweep order."""
+        return [(b % self.n_shards, self.block_columns(b))
+                for b in range(self.n_blocks)]
+
+    def owner(self, col: int) -> int:
+        """Shard owning ``col`` (and its boundary-MPS tensor)."""
+        return (col // self.block) % self.n_shards
+
+
+# ---------------------------------------------------------------------------
+# Contraction option
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistributedBMPS:
+    """Contraction option: column-sharded boundary-MPS, mirroring ``BMPS``.
+
+    ``chi``/``svd`` mean exactly what they do on :class:`BMPS`.  ``n_shards``
+    defaults to the number of available devices; ``block`` to one contiguous
+    block per shard.  ``devices`` pins the shard->device map (defaults to
+    ``jax.devices()``; shards beyond ``len(devices)`` wrap round-robin, so
+    any layout also runs — bit-identically — on a single device).
+    """
+    chi: int
+    svd: object = DirectSVD()
+    n_shards: Optional[int] = None
+    block: Optional[int] = None
+    devices: Tuple = ()
+
+    @classmethod
+    def randomized(cls, chi: int, niter: int = 4, oversample: int = 8,
+                   fused: bool = True, **kw) -> "DistributedBMPS":
+        """Distributed IBMPS / two-layer IBMPS (mirror of BMPS.randomized)."""
+        return cls(chi, svd=RandomizedSVD(niter=niter, oversample=oversample,
+                                          fused=fused), **kw)
+
+    @classmethod
+    def for_mesh(cls, mesh, chi: int, batch_index: int = 0,
+                 **kw) -> "DistributedBMPS":
+        """Shard over the 'col' axis of a :func:`~repro.launch.mesh.peps_mesh`.
+
+        With a batched mesh ``('col', 'batch')``, ``batch_index`` selects the
+        column of devices this state contracts on (one ensemble member per
+        batch slice)."""
+        names = list(mesh.axis_names)
+        if "col" in names:
+            devs = np.moveaxis(np.asarray(mesh.devices), names.index("col"), 0)
+            devs = devs.reshape(devs.shape[0], -1)
+            devs = devs[:, batch_index % devs.shape[1]]
+        else:
+            devs = np.asarray(mesh.devices).reshape(-1)
+        return cls(chi, devices=tuple(devs.tolist()),
+                   n_shards=kw.pop("n_shards", len(devs)), **kw)
+
+    def resolve(self, ncol: int) -> Tuple[ColumnLayout, Tuple]:
+        """Concrete (layout, devices) for an ``ncol``-column lattice."""
+        devices = tuple(self.devices) if self.devices else tuple(jax.devices())
+        n = self.n_shards if self.n_shards is not None else len(devices)
+        n = max(1, min(n, ncol))
+        block = self.block if self.block is not None else -(-ncol // n)
+        return ColumnLayout(ncol, n, block), devices
+
+
+# ---------------------------------------------------------------------------
+# Placement helpers
+# ---------------------------------------------------------------------------
+
+def _shard_device(layout: ColumnLayout, devices, shard: int):
+    return devices[shard % len(devices)]
+
+def _owner_device(layout: ColumnLayout, devices, col: int):
+    return _shard_device(layout, devices, layout.owner(col))
+
+
+def put_columns(rows: Sequence[Sequence[jnp.ndarray]], layout: ColumnLayout,
+                devices) -> List[List[jnp.ndarray]]:
+    """Commit every column of a tensor grid to its owner shard's device.
+
+    ``device_put`` is a no-op for tensors already resident, so re-sharding
+    an already-placed grid is free."""
+    return [[jax.device_put(t, _owner_device(layout, devices, c))
+             for c, t in enumerate(row)] for row in rows]
+
+
+def gather_columns(cols: Sequence[jnp.ndarray], device=None) -> List[jnp.ndarray]:
+    """Pull a list of per-column tensors onto one device (default: device 0).
+
+    Used to hand sharded environments to the host-local strip contractions
+    of :mod:`repro.core.expectation` / :mod:`repro.core.full_update`."""
+    if device is None:
+        device = jax.local_devices()[0]
+    return [jax.device_put(t, device) for t in cols]
+
+
+# ---------------------------------------------------------------------------
+# Distributed row absorption (the halo-exchange step)
+# ---------------------------------------------------------------------------
+
+def _absorb_row(svec_cols, layout: ColumnLayout, devices, kernel,
+                make_args, keys) -> List[jnp.ndarray]:
+    """Run one zip-up row absorption block by block across the shards.
+
+    ``kernel`` is one of the shard-local kernels of :mod:`repro.core.bmps`;
+    ``make_args(cols)`` supplies its per-block network operands (already
+    committed to the owner).  Implements the halo protocol documented in the
+    module docstring: the carry moves forward one shard per block edge; the
+    first boundary tensor a block emits moves back to the previous shard.
+    """
+    ncol = layout.ncol
+    blocks = layout.blocks
+    out_cols: List[Optional[jnp.ndarray]] = [None] * ncol
+    v = None
+    for bi, (shard, cols) in enumerate(blocks):
+        dev = _shard_device(layout, devices, shard)
+        if v is not None:
+            v = jax.device_put(v, dev)                  # halo: carry forward
+        outs, v = kernel(v, [svec_cols[c] for c in cols], *make_args(cols),
+                         [keys[c] for c in cols],
+                         first=(bi == 0), last=(bi == len(blocks) - 1))
+        start = cols[0] - 1 if bi > 0 else 0
+        for k, t in enumerate(outs):
+            out_cols[start + k] = t
+    # halo: each block's first output is the previous block's last column —
+    # hand it back to its owner so the boundary MPS stays column-sharded.
+    for bi in range(1, len(blocks)):
+        prev_shard, prev_cols = blocks[bi - 1]
+        c = prev_cols[-1]
+        out_cols[c] = jax.device_put(
+            out_cols[c], _shard_device(layout, devices, prev_shard))
+    return out_cols
+
+
+def _row_twolayer(svec_cols, bra_row, ket_row, option: DistributedBMPS,
+                  layout, devices, key) -> List[jnp.ndarray]:
+    def kernel(v, svec, bra, ket, keys, first, last):
+        return zipup_block_twolayer(v, svec, bra, ket, option.chi, option.svd,
+                                    keys, first=first, last=last)
+    make_args = lambda cols: ([bra_row[c] for c in cols],
+                              [ket_row[c] for c in cols])
+    return _absorb_row(svec_cols, layout, devices, kernel, make_args,
+                       _keys(key, layout.ncol))
+
+
+def _row_onelayer(svec_cols, row, option: DistributedBMPS, layout, devices,
+                  key) -> List[jnp.ndarray]:
+    def kernel(v, svec, mpo, keys, first, last):
+        return zipup_block(v, svec, mpo, option.chi, option.svd, keys,
+                           first=first, last=last)
+    make_args = lambda cols: ([row[c] for c in cols],)
+    return _absorb_row(svec_cols, layout, devices, kernel, make_args,
+                       _keys(key, layout.ncol))
+
+
+def _final_scalar(svec_cols, layout: ColumnLayout, devices) -> jnp.ndarray:
+    """Close a fully-absorbed boundary MPS (all dangling axes dim 1).
+
+    Per-block partial chain products run shard-resident (in parallel, via
+    async dispatch); only the tiny per-block (l, r) matrices are gathered
+    for the final ordered product."""
+    partials = []
+    for shard, cols in layout.blocks:
+        acc = None
+        for c in cols:
+            t = svec_cols[c]
+            mat = t.reshape(t.shape[0], t.shape[-1])
+            acc = mat if acc is None else acc @ mat
+        partials.append(acc)
+    d0 = jax.local_devices()[0]
+    vec = jnp.ones((1,), dtype=svec_cols[0].dtype)
+    for p in partials:
+        vec = vec @ jax.device_put(p, d0)
+    return vec.reshape(())
+
+
+# ---------------------------------------------------------------------------
+# Contraction entry points (dispatched to from repro.core.bmps)
+# ---------------------------------------------------------------------------
+
+def contract_twolayer(bra_rows, ket_rows, option: DistributedBMPS,
+                      key=None) -> jnp.ndarray:
+    """Column-sharded <bra|ket>; same arithmetic as the single-device path."""
+    nrow, ncol = len(bra_rows), len(bra_rows[0])
+    layout, devices = option.resolve(ncol)
+    keys = _keys(key, max(nrow, 2))
+    bra = put_columns(bra_rows, layout, devices)
+    ket = bra if ket_rows is bra_rows else put_columns(ket_rows, layout, devices)
+    dtype = bra_rows[0][0].dtype
+    svec = [jax.device_put(jnp.ones((1, 1, 1, 1), dtype=dtype),
+                           _owner_device(layout, devices, c))
+            for c in range(ncol)]
+    for i in range(nrow):
+        svec = _row_twolayer(svec, bra[i], ket[i], option, layout, devices,
+                             keys[i])
+    return _final_scalar(svec, layout, devices)
+
+
+def contract_onelayer(rows, option: DistributedBMPS, key=None) -> jnp.ndarray:
+    """Column-sharded Alg. 2 (one-layer) contraction to a scalar."""
+    nrow, ncol = len(rows), len(rows[0])
+    layout, devices = option.resolve(ncol)
+    keys = _keys(key, max(nrow, 2))
+    rows_c = put_columns(rows, layout, devices)
+    # initial boundary MPS = row 0 with u squeezed: (l, d, r)
+    svec = [t.reshape(t.shape[1], t.shape[2], t.shape[3]) for t in rows_c[0]]
+    for i in range(1, nrow):
+        svec = _row_onelayer(svec, rows_c[i], option, layout, devices, keys[i])
+    return _final_scalar(svec, layout, devices)
+
+
+def top_environments(bra_rows, ket_rows, option: DistributedBMPS,
+                     key=None) -> List[List[jnp.ndarray]]:
+    """Sharded sibling of :func:`repro.core.environments.top_environments`.
+
+    The O(nrow) boundary sweeps — the expensive part of every cached
+    expectation — run column-sharded; each environment level is then
+    *gathered* to the default device, because the strip contractions that
+    consume environments (``expectation.strip_value``, the full update's
+    neighborhood extraction) are short, chi-bounded host-local networks.
+    Returned values match the single-device function to rounding."""
+    nrow, ncol = len(bra_rows), len(bra_rows[0])
+    layout, devices = option.resolve(ncol)
+    dtype = bra_rows[0][0].dtype
+    if key is None:
+        from repro.core.environments import DEFAULT_KEY_SEED
+        key = jax.random.PRNGKey(DEFAULT_KEY_SEED)
+    keys = jax.random.split(key, max(nrow, 2))
+    bra = put_columns(bra_rows, layout, devices)
+    ket = bra if ket_rows is bra_rows else put_columns(ket_rows, layout, devices)
+    envs = [[jnp.ones((1, 1, 1, 1), dtype=dtype) for _ in range(ncol)]]
+    svec = [jax.device_put(jnp.ones((1, 1, 1, 1), dtype=dtype),
+                           _owner_device(layout, devices, c))
+            for c in range(ncol)]
+    for i in range(nrow):
+        svec = _row_twolayer(svec, bra[i], ket[i], option, layout, devices,
+                             keys[i])
+        envs.append(gather_columns(svec))
+    return envs
+
+
+# ---------------------------------------------------------------------------
+# Introspection (used by benchmarks and docs examples)
+# ---------------------------------------------------------------------------
+
+def halo_bytes_per_row(state_or_rows, option: DistributedBMPS) -> int:
+    """Bytes crossing shard boundaries per two-layer row absorption.
+
+    Counts the forward carry and the backward boundary tensor at every
+    block edge, assuming steady-state bonds (boundary = chi, pair bonds =
+    the interior bond squared) — the analytic communication volume the
+    scaling benchmarks report alongside wall time."""
+    rows = getattr(state_or_rows, "sites", state_or_rows)
+    ncol = len(rows[0])
+    layout, _ = option.resolve(ncol)
+    t = rows[min(1, len(rows) - 1)][min(1, ncol - 1)]
+    r = max(t.shape[1:])                       # interior bond
+    chi = option.chi
+    itemsize = jnp.dtype(t.dtype).itemsize
+    carry = chi * r * r * chi * r * r          # (m, h1, h2, g, k1, k2)
+    backward = chi * r * r * chi               # (l, d_bra, d_ket, r)
+    blocks = layout.blocks
+    # only block edges whose two sides live on DIFFERENT shards move bytes
+    # (consecutive same-shard blocks — e.g. n_shards=1 — exchange nothing)
+    edges = sum(1 for i in range(1, len(blocks))
+                if blocks[i][0] != blocks[i - 1][0])
+    return edges * (carry + backward) * itemsize

@@ -22,6 +22,14 @@ from repro.core import planner
 from repro.core.bmps import BMPS, _zipup_row_twolayer, trivial_twolayer_boundary
 
 
+#: Seed of the PRNG key used when an environment sweep is called with
+#: ``key=None``.  The distributed sibling
+#: (:func:`repro.core.distributed.top_environments`) shares this constant so
+#: ``key=None`` means the *same* sweep on every path — a divergent default
+#: would silently break the sharded == single-device guarantee.
+DEFAULT_KEY_SEED = 11
+
+
 def trivial_env(ncol: int, dtype) -> List[jnp.ndarray]:
     one = jnp.ones((1, 1, 1, 1), dtype=dtype)
     return [one for _ in range(ncol)]
@@ -37,11 +45,22 @@ def top_environments(bra_rows, ket_rows, option: BMPS, key=None) -> List[List[jn
     """``top[i]`` = boundary MPS of rows ``0..i-1`` (``top[0]`` trivial).
 
     Length ``nrow+1``: ``top[nrow]`` is the fully-absorbed network still in
-    MPS form (dangling pair axes of dim 1) — closing it gives <bra|ket>."""
+    MPS form (dangling pair axes of dim 1) — closing it gives <bra|ket>.
+
+    ``option`` may be a :class:`~repro.core.distributed.DistributedBMPS`:
+    the sweeps then run column-sharded across devices (the halo-exchange
+    pipeline of :mod:`repro.core.distributed`) and each environment level is
+    gathered back to the default device, so every downstream consumer —
+    ``expectation`` strips, the full update's neighborhood extraction —
+    works unchanged.  Values match the single-device sweep to rounding."""
+    if key is None:
+        key = jax.random.PRNGKey(DEFAULT_KEY_SEED)
+    from repro.core.bmps import _distributed_module
+    dist = _distributed_module(option)
+    if dist is not None:
+        return dist.top_environments(bra_rows, ket_rows, option, key)
     nrow, ncol = len(bra_rows), len(bra_rows[0])
     dtype = bra_rows[0][0].dtype
-    if key is None:
-        key = jax.random.PRNGKey(11)
     keys = jax.random.split(key, max(nrow, 2))
     envs = [trivial_env(ncol, dtype)]
     svec = trivial_twolayer_boundary(ncol, dtype)

@@ -90,7 +90,13 @@ def _log_fidelity(f) -> None:
 # ---------------------------------------------------------------------------
 
 def env_option(update) -> BMPS:
-    """The boundary-MPS option used for this update's row environments."""
+    """The boundary-MPS option used for this update's row environments.
+
+    ``FullUpdate.env_contract``, when set, wins — that is the seam through
+    which distributed (column-sharded) environment sweeps enter full-update
+    ITE; see :mod:`repro.core.distributed`."""
+    if getattr(update, "env_contract", None) is not None:
+        return update.env_contract
     return BMPS(update.chi, update.env_svd)
 
 

@@ -1,6 +1,24 @@
 """PEPS state and operator application (paper Sections II-C, III-A, IV-A).
 
 Site tensor layout: ``(p, u, l, d, r)`` — physical, up, left, down, right.
+This module holds the **canonical leg-ordering diagram** for the whole
+library; other modules (``bmps``, ``sharding``, ``distributed``, docs)
+reference it rather than restating it::
+
+                 (u)
+                  |
+           (l) --[T]-- (r)        T[p, u, l, d, r]
+                  | \\
+                 (d) (p)          p = physical leg (dim 2 for qubits)
+
+    Grid, row-major; site (i, j) holds qubit i*ncol + j:
+
+        (0,0) --- (0,1) --- (0,2)        u of row 0 and l of column 0
+          |         |         |          are dim-1 boundary bonds; r/d
+        (1,0) --- (1,1) --- (1,2)        bonds of interior sites carry
+          |         |         |          the variational bond dimension.
+        (2,0) --- (2,1) --- (2,2)
+
 Boundary bonds have dimension 1.  Grid site ``(i, j)`` (row-major) holds the
 qubit ``i*ncol + j``.
 
@@ -187,6 +205,12 @@ class FullUpdate:
                 cadence, environments are always refreshed when a bond
                 dimension has grown since the cached sweep (see
                 ``full_update.envs_compatible``).
+    env_contract: full contraction option for the environment sweeps,
+                overriding ``(chi, env_svd)`` when set.  Pass a
+                :class:`repro.core.distributed.DistributedBMPS` to run the
+                row-environment sweeps column-sharded across devices —
+                this is how full-update ITE picks up intra-state
+                distribution (values match single-device to rounding).
     """
     rank: int
     svd: object = DirectSVD()
@@ -196,6 +220,7 @@ class FullUpdate:
     als_eps: float = 1e-12
     positive: bool = True
     env_refresh_every: int = 1
+    env_contract: object = None
 
 
 def check_update(update) -> None:

@@ -1,4 +1,4 @@
-"""Distributed PEPS: Cyclops-style tensor distribution on a JAX mesh.
+"""Distributed PEPS ensembles: Cyclops-style tensor distribution on a JAX mesh.
 
 The paper distributes every big site tensor over all MPI processes; the JAX
 analogue shards each site tensor's bond axes over the ``model`` axis while an
@@ -7,6 +7,15 @@ sweeps of Section VI-D) shards over ``pod``+``data``.  Contractions across
 sharded bonds lower to GSPMD collectives; the Gram orthogonalization keeps
 factorizations local (paper Alg. 5) — exactly the trade this module exists
 to measure in the dry-run.
+
+Scope: this module parallelizes *many independent states* (and,
+cyclops-mode, the axes of individual big tensors).  Contracting **one**
+state too large for a single device is the job of
+:mod:`repro.core.distributed`, which shards the lattice's *columns*
+block-cyclically and pipelines the boundary-MPS sweep with halo exchanges
+(paper Section V).  Site tensors everywhere follow the canonical
+``(p, u, l, d, r)`` leg ordering — see the diagram in
+:mod:`repro.core.peps`.
 """
 from __future__ import annotations
 

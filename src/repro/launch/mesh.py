@@ -39,6 +39,19 @@ def make_host_mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
+def peps_mesh(n_col_shards: int, batch: int = 1):
+    """Mesh for intra-state distributed PEPS contraction: ``('col', 'batch')``.
+
+    ``col`` is the column-shard axis consumed by
+    :meth:`repro.core.distributed.DistributedBMPS.for_mesh`; ``batch`` (when
+    > 1) slices the remaining devices across independent ensemble members,
+    one column of the device grid per member.  Requires
+    ``n_col_shards * batch`` available devices — on CPU, launch with e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    return make_mesh((n_col_shards, batch), ("col", "batch"))
+
+
 def use_mesh(mesh):
     """Context manager installing ``mesh`` as the ambient mesh.
 

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Doc hygiene: fail on broken intra-repo links in docs/ and README.md.
+
+Scans markdown files for inline links/images ``[text](target)`` and
+reference definitions ``[label]: target`` and verifies that every
+*relative* target resolves to an existing file or directory (anchors and
+query strings are stripped; ``http(s)://``, ``mailto:`` and pure-anchor
+links are ignored).  Used by CI and ``make docs-check`` — a link that rots
+when a module or doc moves should fail the build, not a reader.
+
+Exit status: 0 when clean, 1 with a per-link report otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCAN = [REPO / "README.md", *sorted((REPO / "docs").glob("**/*.md"))]
+
+# inline [text](target) — tolerates one level of nested () in the target;
+# images share the syntax (the leading ! is irrelevant to the target check)
+_INLINE = re.compile(r"\[[^\]]*\]\(\s*(<[^>]*>|[^()\s]+(?:\([^()]*\)[^()\s]*)*)\s*\)")
+# reference definitions: [label]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # any URI scheme
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced and inline code spans — links there are examples."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def iter_links(text: str):
+    for m in _INLINE.finditer(text):
+        yield m.group(1).strip("<>")
+    for m in _REFDEF.finditer(text):
+        yield m.group(1).strip("<>")
+
+
+def check_file(path: Path) -> list:
+    broken = []
+    for target in iter_links(_strip_code(path.read_text())):
+        if not target or target.startswith("#") or _EXTERNAL.match(target):
+            continue
+        rel = target.split("#", 1)[0].split("?", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            broken.append((target, resolved))
+    return broken
+
+
+def main() -> int:
+    missing_docs = [p for p in SCAN if not p.exists()]
+    all_broken = []
+    for path in SCAN:
+        if not path.exists():
+            continue
+        for target, resolved in check_file(path):
+            all_broken.append((path.relative_to(REPO), target, resolved))
+    for path, target, resolved in all_broken:
+        print(f"BROKEN  {path}: ({target}) -> {resolved}", file=sys.stderr)
+    for path in missing_docs:
+        print(f"MISSING {path.relative_to(REPO)}", file=sys.stderr)
+    n = len(SCAN) - len(missing_docs)
+    if all_broken or missing_docs:
+        print(f"doc-link check FAILED: {len(all_broken)} broken link(s) "
+              f"across {n} file(s)", file=sys.stderr)
+        return 1
+    print(f"doc-link check OK: {n} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
