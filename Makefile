@@ -26,7 +26,8 @@ bench-distributed:
 .PHONY: test-distributed
 test-distributed:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_distributed.py
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_distributed.py \
+	    tests/test_spmd.py
 
 .PHONY: docs-check
 docs-check:

@@ -1,12 +1,16 @@
 """Column-sharded distributed boundary contraction scaling (ISSUE 4 tentpole).
 
-Two sweeps over ``norm_squared`` via the two-layer zip-up with a
+Three sweeps over ``norm_squared`` via the two-layer zip-up with a
 :class:`~repro.core.distributed.DistributedBMPS` option:
 
 * **weak scaling**  — fixed columns *per shard* (the lattice grows with the
   shard count): the regime the paper's Section V targets, where one state is
   too large for a single device.
 * **strong scaling** — fixed lattice, increasing shard count.
+* **wavefront modes** — host (explicit placement) vs spmd (compiled
+  ``shard_map`` + ``ppermute`` superstep) vs auto on a fixed lattice,
+  reporting the superstep row counts and program-build/replay split
+  alongside wall time (ISSUE 5 tentpole).
 
 Each row reports wall time, the speedup vs the 1-shard run of the same
 sweep, the relative deviation from the single-device ``BMPS`` value (must
@@ -101,6 +105,39 @@ def main():
                      base_t, key)
         if base_t is None:
             base_t = t
+
+    # wavefront modes: host pipeline vs compiled SPMD superstep vs auto on
+    # one fixed lattice (rows split ramp -> host, saturated -> superstep).
+    # chi == bond^2 here so the boundary saturates after one row and most
+    # rows are superstep-eligible — the steady-state regime the SPMD mode
+    # targets.  First call per mode pays the plan + program build; the
+    # pinned timing is the compiled replay.
+    from repro.core import spmd
+    nrow_w, ncol_w, bond_w = (6, 16, 2) if SCALE == "small" else (10, 24, 3)
+    chi_w = bond_w * bond_w
+    state = _state(nrow_w, ncol_w, bond_w, scale=2.4)
+    ref = complex(norm_squared(state, BMPS.randomized(chi_w, niter=2,
+                                                      oversample=4), key))
+    for mode in ("host", "spmd", "auto"):
+        opt = DistributedBMPS.randomized(chi_w, niter=2, oversample=4,
+                                         n_shards=min(8, n_dev),
+                                         wavefront=mode)
+        spmd.reset_stats()
+        val = complex(norm_squared(state, opt, key))   # warm (plan + build)
+        rel = abs(val - ref) / max(abs(ref), 1e-300)
+        assert rel <= 1e-10, (mode, rel)
+        built = spmd.stats()["superstep_builds"]
+        spmd.reset_stats()
+        t = timeit(lambda: norm_squared(state, opt, key), repeats=3,
+                   warmup=1)
+        st = spmd.stats()
+        emit(f"distributed/wavefront/{mode}", t,
+             f"rel_err={rel:.1e};rows_spmd={st['rows_spmd'] // 4};"
+             f"rows_host={st['rows_host'] // 4};builds_first_call={built}")
+    emit_info("distributed/wavefront/config",
+              f"nrow={nrow_w};ncol={ncol_w};bond={bond_w};chi={chi_w};"
+              "NOTE=virtual CPU devices share one core - compare structure,"
+              " not wall time")
 
     emit_info("distributed/config",
               f"nrow={nrow};bond={bond};chi={chi};devices={n_dev};"

@@ -28,11 +28,13 @@ into the boundary, taking the running carry tensor V from the block to its
 left and returning the carry for the block to its right.  ``_zipup_row*``
 run a whole row as one block (``first=last=True``);
 :mod:`repro.core.distributed` composes the same kernels across a device
-mesh, moving only the carry and one boundary tensor per block edge (the
-halo exchange).  Because the kernels are per-site identical to the
-single-device sweep — same einsumsvd subnetworks, same PRNG keys — the
-distributed contraction reproduces single-device values to rounding, and
-every shard replays the same planner cache entries.
+mesh with host-issued halos, and :mod:`repro.core.spmd` composes them
+column-at-a-time inside a compiled ``shard_map`` superstep with
+``ppermute`` halos (chi-saturated rows).  Because the kernels are per-site
+identical to the single-device sweep — same einsumsvd subnetworks, same
+PRNG keys — every execution mode reproduces single-device values to
+rounding and replays the same planner cache entries
+(docs/contraction.md walks the full stack).
 
 High-level entry points (``amplitude``/``norm_squared``/``inner`` and the
 ``contract_*`` functions) accept either a :class:`BMPS` option or a

@@ -44,16 +44,22 @@ shard ``s`` — whose columns for row ``i`` are already absorbed — can start
 row ``i+1`` as soon as its carry arrives: the sweep pipelines into a
 wavefront across rows without any explicit scheduling.
 
-Why not one big ``shard_map``?  The truncated zip-up is shape-polymorphic:
-boundary bonds ramp ``1 -> chi`` over the first rows and at the lattice
-edges, so the per-shard programs of one superstep have different operand
-shapes, which an SPMD region cannot express without zero-padding every bond
-to chi.  Padding changes the randomized-SVD sketches and breaks the
-bit-equality with the single-device sweep that this module guarantees (and
-tests enforce at 1e-10).  The explicit-placement pipeline keeps the
-arithmetic identical; an SPMD steady-state kernel with ``ppermute`` halos
-remains open for real accelerator meshes (see docs/distributed.md,
-"Design notes").
+Execution modes (``wavefront=``)
+--------------------------------
+The pipeline above is the ``"host"`` mode: the wavefront is scheduled from
+the host with explicit device placement.  It is the only mode that can run
+*bond-ramp* rows — the truncated zip-up is shape-polymorphic while boundary
+bonds ramp ``1 -> chi``, and an SPMD region cannot express shards with
+different operand shapes without zero-padding, which would change the
+randomized-SVD sketches and break the single-device equivalence this module
+guarantees.  For **chi-saturated rows** (boundary shapes a fixed point of
+the absorption) the shapes ARE uniform away from the lattice edges, and
+``wavefront="spmd"`` / ``"auto"`` hand such rows to the compiled
+``shard_map`` + ``lax.ppermute`` superstep of :mod:`repro.core.spmd` — same
+einsumsvd sequence, wavefront scheduling moved from the host into one
+compiled program.  ``"auto"`` detects saturation per row and otherwise
+stays on this pipeline; see docs/contraction.md for the mode decision
+table.
 
 Planner-cache contract
 ----------------------
@@ -143,12 +149,38 @@ class DistributedBMPS:
     block per shard.  ``devices`` pins the shard->device map (defaults to
     ``jax.devices()``; shards beyond ``len(devices)`` wrap round-robin, so
     any layout also runs — bit-identically — on a single device).
+
+    ``wavefront`` selects how row absorptions are scheduled:
+
+    * ``"host"`` (default) — the explicit-placement pipeline above, the
+      only scheduler that handles shape-polymorphic (bond-ramp) rows;
+    * ``"spmd"`` — chi-saturated rows run in the compiled ``shard_map`` +
+      ``ppermute`` superstep of :mod:`repro.core.spmd`, which plans its own
+      equal-width column split over the distinct devices (it may differ
+      from this option's block-cyclic layout — blocking never changes
+      values).  Rows it cannot express (bond-ramp rows, no uniform split)
+      fall back to the host pipeline, degenerate single-shard rows still
+      compile as one fused chain, and a sweep that never engaged the
+      superstep warns;
+    * ``"auto"`` — like ``"spmd"`` but engages only when the superstep
+      actually buys parallelism (>= 2 uniform shards on distinct devices),
+      and never warns.
+
+    All three modes execute the identical einsumsvd sequence — mode choice
+    is pure scheduling and never changes values beyond rounding.
     """
     chi: int
     svd: object = DirectSVD()
     n_shards: Optional[int] = None
     block: Optional[int] = None
     devices: Tuple = ()
+    wavefront: str = "host"
+
+    def __post_init__(self):
+        if self.wavefront not in ("host", "spmd", "auto"):
+            raise ValueError(
+                f"wavefront must be 'host', 'spmd' or 'auto', "
+                f"got {self.wavefront!r}")
 
     @classmethod
     def randomized(cls, chi: int, niter: int = 4, oversample: int = 8,
@@ -274,6 +306,76 @@ def _row_onelayer(svec_cols, row, option: DistributedBMPS, layout, devices,
                        _keys(key, layout.ncol))
 
 
+def _sweep_rows(svec_cols, grids, option: DistributedBMPS, layout, devices,
+                row_keys, kernel_name: str, collect: bool = False):
+    """Absorb all rows of ``grids`` into ``svec_cols``, per-row dispatching
+    between the host pipeline and the compiled SPMD superstep.
+
+    ``grids`` is ``(rows,)`` one-layer or ``(bra_rows, ket_rows)`` two-layer
+    (pass the same list object twice for <psi|psi>).  ``row_keys[i]`` is row
+    ``i``'s key, split into per-column keys identically on both paths.
+    ``collect=True`` returns one gathered boundary level per row (for
+    environment sweeps).  The wavefront mode decides the dispatch; values
+    are mode-independent (same einsumsvd sequence everywhere).
+    """
+    nrow = len(grids[0])
+    mode = option.wavefront
+    spmd_mod = None
+    if mode != "host":
+        from repro.core import spmd as spmd_mod
+        kernel = (spmd_mod.TWO_LAYER if kernel_name == "twolayer"
+                  else spmd_mod.ONE_LAYER)
+    levels = []
+    used_spmd = False
+    i = 0
+    while i < nrow:
+        run, plan = 0, None
+        if spmd_mod is not None:
+            run, plan = spmd_mod.plan_run(
+                kernel, svec_cols, grids, i, option.chi, option.svd,
+                layout.n_shards, devices, mode)
+        if run:
+            slices = []
+            for g in grids:
+                if slices and g is grids[0]:
+                    slices.append(slices[0])
+                else:
+                    slices.append([g[i + j] for j in range(run)])
+            svec_cols, lv = spmd_mod.absorb_rows(
+                kernel, svec_cols, tuple(slices), option.chi, option.svd,
+                plan, row_keys[i:i + run], devices, collect=collect)
+            # hand back to the host pipeline's placement (no-op when the
+            # superstep layout matches the column-block-cyclic one)
+            svec_cols = [jax.device_put(t, _owner_device(layout, devices, c))
+                         for c, t in enumerate(svec_cols)]
+            if collect:
+                levels.extend(lv)
+            used_spmd = True
+            i += run
+            continue
+        key = row_keys[i]
+        if kernel_name == "twolayer":
+            svec_cols = _row_twolayer(svec_cols, grids[0][i], grids[1][i],
+                                      option, layout, devices, key)
+        else:
+            svec_cols = _row_onelayer(svec_cols, grids[0][i], option, layout,
+                                      devices, key)
+        if collect:
+            levels.append(gather_columns(svec_cols))
+        if spmd_mod is not None:
+            spmd_mod.note_host_rows(1)
+        i += 1
+    if mode == "spmd" and not used_spmd and nrow > 0:
+        import warnings
+        warnings.warn(
+            "wavefront='spmd' sweep never engaged the SPMD superstep (all "
+            "rows were bond-ramp rows, or no uniform column split exists "
+            "for this lattice/device set) — the whole sweep ran on the "
+            "explicit-placement host pipeline. Use wavefront='auto' to "
+            "silence this.", stacklevel=3)
+    return svec_cols, levels
+
+
 def _final_scalar(svec_cols, layout: ColumnLayout, devices) -> jnp.ndarray:
     """Close a fully-absorbed boundary MPS (all dangling axes dim 1).
 
@@ -311,9 +413,8 @@ def contract_twolayer(bra_rows, ket_rows, option: DistributedBMPS,
     svec = [jax.device_put(jnp.ones((1, 1, 1, 1), dtype=dtype),
                            _owner_device(layout, devices, c))
             for c in range(ncol)]
-    for i in range(nrow):
-        svec = _row_twolayer(svec, bra[i], ket[i], option, layout, devices,
-                             keys[i])
+    svec, _ = _sweep_rows(svec, (bra, ket), option, layout, devices,
+                          keys[:nrow], "twolayer")
     return _final_scalar(svec, layout, devices)
 
 
@@ -325,8 +426,8 @@ def contract_onelayer(rows, option: DistributedBMPS, key=None) -> jnp.ndarray:
     rows_c = put_columns(rows, layout, devices)
     # initial boundary MPS = row 0 with u squeezed: (l, d, r)
     svec = [t.reshape(t.shape[1], t.shape[2], t.shape[3]) for t in rows_c[0]]
-    for i in range(1, nrow):
-        svec = _row_onelayer(svec, rows_c[i], option, layout, devices, keys[i])
+    svec, _ = _sweep_rows(svec, (rows_c[1:],), option, layout, devices,
+                          keys[1:nrow], "onelayer")
     return _final_scalar(svec, layout, devices)
 
 
@@ -335,9 +436,10 @@ def top_environments(bra_rows, ket_rows, option: DistributedBMPS,
     """Sharded sibling of :func:`repro.core.environments.top_environments`.
 
     The O(nrow) boundary sweeps — the expensive part of every cached
-    expectation — run column-sharded; each environment level is then
-    *gathered* to the default device, because the strip contractions that
-    consume environments (``expectation.strip_value``, the full update's
+    expectation — run column-sharded (host pipeline or SPMD superstep per
+    the wavefront mode); each environment level is then *gathered* to the
+    default device, because the strip contractions that consume
+    environments (``expectation.strip_value``, the full update's
     neighborhood extraction) are short, chi-bounded host-local networks.
     Returned values match the single-device function to rounding."""
     nrow, ncol = len(bra_rows), len(bra_rows[0])
@@ -349,14 +451,13 @@ def top_environments(bra_rows, ket_rows, option: DistributedBMPS,
     keys = jax.random.split(key, max(nrow, 2))
     bra = put_columns(bra_rows, layout, devices)
     ket = bra if ket_rows is bra_rows else put_columns(ket_rows, layout, devices)
-    envs = [[jnp.ones((1, 1, 1, 1), dtype=dtype) for _ in range(ncol)]]
     svec = [jax.device_put(jnp.ones((1, 1, 1, 1), dtype=dtype),
                            _owner_device(layout, devices, c))
             for c in range(ncol)]
-    for i in range(nrow):
-        svec = _row_twolayer(svec, bra[i], ket[i], option, layout, devices,
-                             keys[i])
-        envs.append(gather_columns(svec))
+    _, levels = _sweep_rows(svec, (bra, ket), option, layout, devices,
+                            keys[:nrow], "twolayer", collect=True)
+    envs = [[jnp.ones((1, 1, 1, 1), dtype=dtype) for _ in range(ncol)]]
+    envs.extend(levels)
     return envs
 
 

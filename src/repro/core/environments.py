@@ -48,8 +48,11 @@ def top_environments(bra_rows, ket_rows, option: BMPS, key=None) -> List[List[jn
     MPS form (dangling pair axes of dim 1) — closing it gives <bra|ket>.
 
     ``option`` may be a :class:`~repro.core.distributed.DistributedBMPS`:
-    the sweeps then run column-sharded across devices (the halo-exchange
-    pipeline of :mod:`repro.core.distributed`) and each environment level is
+    the sweeps then run column-sharded across devices — the host
+    halo-exchange pipeline of :mod:`repro.core.distributed`, or, for
+    chi-saturated rows under ``wavefront="spmd"``/``"auto"``, the compiled
+    superstep of :mod:`repro.core.spmd` (per-row environment levels are
+    collected inside the compiled program) — and each environment level is
     gathered back to the default device, so every downstream consumer —
     ``expectation`` strips, the full update's neighborhood extraction —
     works unchanged.  Values match the single-device sweep to rounding."""

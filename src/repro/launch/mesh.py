@@ -5,6 +5,11 @@ touches jax device state.  The single-pod mesh is 16x16 = 256 chips
 (data, model); the multi-pod mesh adds a leading ``pod`` axis:
 (2, 16, 16) = 512 chips.  The ``pod`` axis is pure data parallelism with
 one (optionally compressed) cross-pod gradient all-reduce per step.
+
+This module also hosts the version-compat :func:`shard_map` wrapper (shared
+by the LM stack in :mod:`repro.models` and the SPMD contraction superstep in
+:mod:`repro.core.spmd`) — it lives here because ``launch.mesh`` depends only
+on jax, so both sides can import it without a cycle.
 """
 from __future__ import annotations
 
@@ -50,6 +55,58 @@ def peps_mesh(n_col_shards: int, batch: int = 1):
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
     return make_mesh((n_col_shards, batch), ("col", "batch"))
+
+
+def col_mesh(devices):
+    """1-D ``('col',)`` mesh over an explicit device list.
+
+    Used by :mod:`repro.core.spmd` to run the compiled wavefront superstep
+    over the devices the explicit-placement pipeline already owns.  Devices
+    must be distinct — a ``Mesh`` cannot repeat a device — so the superstep
+    plans its own equal-width split over the *distinct* device prefix
+    rather than reusing a round-robin-wrapped host layout (blocking is
+    value-invariant, so a different split changes nothing but placement).
+    """
+    import numpy as np
+    arr = np.empty(len(devices), dtype=object)
+    for i, d in enumerate(devices):
+        arr[i] = d
+    return jax.sharding.Mesh(arr, ("col",))
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """Version-compat ``shard_map`` (new ``jax.shard_map`` keyword API).
+
+    Older JAX only has ``jax.experimental.shard_map.shard_map`` whose
+    ``auto=`` is the complement of ``axis_names`` and whose replication
+    check is spelled ``check_rep``.
+    """
+    jsm = getattr(jax, "shard_map", None)
+    if jsm is not None:
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jsm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+    # Legacy partial-auto lowering is fragile (XLA aborts on
+    # IsManualSubgroup for common bodies), so go manual over ALL axes:
+    # numerically identical, at the cost of compute replicated over the
+    # would-be-auto axes — acceptable on the small compat meshes.
+    if axis_names is not None and frozenset(axis_names) != frozenset(
+            mesh.axis_names):
+        import warnings
+        auto = sorted(frozenset(mesh.axis_names) - frozenset(axis_names))
+        warnings.warn(
+            f"legacy JAX shard_map fallback: going manual over ALL of "
+            f"{mesh.axis_names} (requested manual={sorted(axis_names)}); "
+            f"compute will be REPLICATED over {auto} — fine on small "
+            f"compat meshes, a blowup on production meshes.",
+            stacklevel=2)
+    return legacy_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=check_vma,
+                            auto=frozenset())
 
 
 def use_mesh(mesh):

@@ -17,40 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-
-def shard_map(fn, *, mesh, in_specs, out_specs, axis_names=None,
-              check_vma=False):
-    """Version-compat ``shard_map`` (new ``jax.shard_map`` keyword API).
-
-    Older JAX only has ``jax.experimental.shard_map.shard_map`` whose
-    ``auto=`` is the complement of ``axis_names`` and whose replication
-    check is spelled ``check_rep``.
-    """
-    jsm = getattr(jax, "shard_map", None)
-    if jsm is not None:
-        kwargs = {"check_vma": check_vma}
-        if axis_names is not None:
-            kwargs["axis_names"] = axis_names
-        return jsm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   **kwargs)
-    from jax.experimental.shard_map import shard_map as legacy_shard_map
-    # Legacy partial-auto lowering is fragile (XLA aborts on
-    # IsManualSubgroup for common bodies), so go manual over ALL axes:
-    # numerically identical, at the cost of compute replicated over the
-    # would-be-auto axes — acceptable on the small compat meshes.
-    if axis_names is not None and frozenset(axis_names) != frozenset(
-            mesh.axis_names):
-        import warnings
-        auto = sorted(frozenset(mesh.axis_names) - frozenset(axis_names))
-        warnings.warn(
-            f"legacy JAX shard_map fallback: going manual over ALL of "
-            f"{mesh.axis_names} (requested manual={sorted(axis_names)}); "
-            f"compute will be REPLICATED over {auto} — fine on small "
-            f"compat meshes, a blowup on production meshes.",
-            stacklevel=2)
-    return legacy_shard_map(fn, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_rep=check_vma,
-                            auto=frozenset())
+# Version-compat shard_map lives with the mesh utilities so the PEPS SPMD
+# superstep (repro.core.spmd) can share it without importing the LM stack;
+# re-exported here because every models/ call site historically uses it.
+from repro.launch.mesh import shard_map  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,292 @@
+"""Compiled SPMD wavefront superstep: equivalence, handoff, cache reuse.
+
+The contract (see docs/contraction.md): for chi-saturated rows the
+``shard_map`` + ``ppermute`` superstep executes the identical einsumsvd
+sequence as the host-wavefront pipeline and the single-device sweep —
+``wavefront`` mode is pure scheduling — so all three match to <= 1e-10.
+Bond-ramp rows (and rows/layouts the superstep cannot express) always stay
+on the explicit-placement pipeline, with ``spmd.stats()`` counting the
+handoff.
+
+On one device the superstep runs as the degenerate compiled chain (n=1);
+CI additionally runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (make
+test-distributed) so the multi-shard wavefront with real ppermute halos is
+exercised.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bmps, peps, planner, spmd
+from repro.core.bmps import BMPS
+from repro.core.distributed import DistributedBMPS
+from repro.core.environments import top_environments
+from repro.core.expectation import expectation
+from repro.core.observable import Observable
+
+
+def _state(nrow, ncol, bond, seed=3, scale=2.0):
+    s = peps.random_peps(nrow, ncol, bond, jax.random.PRNGKey(seed))
+    return peps.PEPS([[t * scale for t in row] for row in s.sites])
+
+
+def _rel(a, b):
+    a, b = complex(a), complex(b)
+    return abs(a - b) / max(abs(b), 1e-300)
+
+
+def _opt(chi, mode, n_shards=4, block=None):
+    return DistributedBMPS.randomized(chi, niter=2, oversample=4,
+                                      n_shards=n_shards, block=block,
+                                      wavefront=mode)
+
+
+def _bmps(chi):
+    return BMPS.randomized(chi, niter=2, oversample=4)
+
+
+# --------------------------------------------------------------- modes ----
+
+def test_wavefront_validated():
+    with pytest.raises(ValueError):
+        DistributedBMPS(chi=8, wavefront="hots")
+
+
+GRID = [
+    # nrow, ncol, bond, chi, n_shards — chi=8/D=2 saturates after one row,
+    # so every lattice here has superstep-eligible interior rows
+    (5, 8, 2, 8, 2),
+    (5, 12, 2, 8, 4),     # multi-shard uniform split exists on >= 3 devices
+    (4, 13, 2, 8, 4),     # prime ncol: no uniform split — chain or host
+    (4, 10, 2, 6, 4),     # ncol not divisible by n_shards
+]
+
+
+@pytest.mark.parametrize("nrow,ncol,bond,chi,n_shards", GRID)
+def test_norm_squared_all_modes_match(nrow, ncol, bond, chi, n_shards):
+    state = _state(nrow, ncol, bond)
+    key = jax.random.PRNGKey(7)
+    ref = bmps.norm_squared(state, _bmps(chi), key)
+    host = bmps.norm_squared(state, _opt(chi, "host", n_shards), key)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        val = bmps.norm_squared(state, _opt(chi, "spmd", n_shards), key)
+    auto = bmps.norm_squared(state, _opt(chi, "auto", n_shards), key)
+    assert _rel(host, ref) <= 1e-10
+    assert _rel(val, ref) <= 1e-10
+    assert _rel(auto, ref) <= 1e-10
+
+
+def test_amplitude_spmd_matches():
+    state = _state(5, 12, 2)
+    key = jax.random.PRNGKey(9)
+    bits = np.arange(5 * 12) % 2
+    ref = bmps.amplitude(state, bits, _bmps(4), key)
+    spmd.reset_stats()
+    val = bmps.amplitude(state, bits, _opt(4, "spmd"), key)
+    assert _rel(val, ref) <= 1e-10
+    assert spmd.stats()["rows_spmd"] > 0   # one-layer kernel engaged
+
+
+def test_inner_distinct_bra_ket():
+    bra, ket = _state(4, 8, 2, seed=3), _state(4, 8, 2, seed=4)
+    key = jax.random.PRNGKey(1)
+    ref = bmps.inner(bra, ket, _bmps(8), key)
+    val = bmps.inner(bra, ket, _opt(8, "spmd"), key)
+    assert _rel(val, ref) <= 1e-10
+
+
+def test_environments_match_with_auto():
+    state = _state(5, 12, 2)
+    key = jax.random.PRNGKey(4)
+    ref = top_environments(state.sites, state.sites, _bmps(8), key)
+    val = top_environments(state.sites, state.sites, _opt(8, "auto"), key)
+    assert len(ref) == len(val)
+    for env_r, env_v in zip(ref, val):
+        for tr, tv in zip(env_r, env_v):
+            assert tr.shape == tv.shape
+            assert float(jnp.max(jnp.abs(tr - tv))) <= 1e-10 * max(
+                1.0, float(jnp.max(jnp.abs(tr))))
+
+
+def test_expectation_matches():
+    state = _state(5, 8, 2)
+    H = (Observable.ZZ(9, 10) + 0.3 * Observable.X(2)
+         + Observable.ZZ(1, 9) + 0.7 * Observable.Z(12))
+    key = jax.random.PRNGKey(2)
+    ref = expectation(state, H, _bmps(8), key=key)
+    val = expectation(state, H, _opt(8, "spmd"), key=key)
+    assert _rel(val, ref) <= 1e-10
+
+
+def test_acceptance_6x8_chi16_8shards():
+    """ISSUE 5 acceptance: 6x8 D=2 chi=16, 8 requested shards, spmd == host
+    == single-device to <= 1e-10, with auto handing off ramp rows."""
+    state = _state(6, 8, 2, scale=2.2)
+    key = jax.random.PRNGKey(7)
+    ref = bmps.norm_squared(state, BMPS.randomized(16), key)
+    host = bmps.norm_squared(
+        state, DistributedBMPS.randomized(16, n_shards=8, block=1), key)
+    spmd.reset_stats()
+    val = bmps.norm_squared(
+        state, DistributedBMPS.randomized(16, n_shards=8, wavefront="spmd"),
+        key)
+    st = spmd.stats()
+    auto = bmps.norm_squared(
+        state, DistributedBMPS.randomized(16, n_shards=8, wavefront="auto"),
+        key)
+    assert _rel(host, ref) <= 1e-10
+    assert _rel(val, ref) <= 1e-10
+    assert _rel(auto, ref) <= 1e-10
+    # handoff: the bond-ramp row (0) and the last row (dangling d-legs) stay
+    # on the host pipeline; the saturated interior runs in the superstep
+    assert st["rows_spmd"] == 4 and st["rows_host"] == 2, st
+
+
+# ------------------------------------------------------------- handoff ----
+
+def test_ramp_rows_never_enter_superstep():
+    """plan_run refuses non-stationary (bond-ramp) boundaries outright."""
+    state = _state(4, 8, 2)
+    dtype = state.sites[0][0].dtype
+    trivial = [jnp.ones((1, 1, 1, 1), dtype=dtype) for _ in range(8)]
+    run, plan = spmd.plan_run(
+        spmd.TWO_LAYER, trivial, (state.sites, state.sites), 0, 8,
+        _bmps(8).svd, 4, tuple(jax.devices()), "spmd")
+    assert run == 0 and plan is None
+
+
+def test_auto_handoff_counts():
+    state = _state(6, 12, 2)
+    key = jax.random.PRNGKey(7)
+    spmd.reset_stats()
+    bmps.norm_squared(state, _opt(8, "spmd"), key)
+    st = spmd.stats()
+    # rows 1..4 are chi-saturated (chi=8 = D^4/2 saturates after row 0);
+    # row 0 (ramp) and row 5 (last row, d-legs dim 1) go to the host path
+    assert st["rows_spmd"] == 4 and st["rows_host"] == 2, st
+    assert st["superstep_calls"] == 1, st           # one batch of R=4
+    # auto on a single device declines (no parallelism to buy); with >= 3
+    # distinct devices it engages exactly like spmd
+    spmd.reset_stats()
+    bmps.norm_squared(state, _opt(8, "auto"), key)
+    st = spmd.stats()
+    if len(jax.devices()) >= 3:
+        assert st["rows_spmd"] == 4, st
+    else:
+        assert st["rows_spmd"] == 0 and st["rows_host"] == 6, st
+
+
+def test_spmd_mode_warns_when_never_engaged():
+    # 2 rows: row 0 ramps, row 1 is the last row — nothing is saturated
+    state = _state(2, 6, 2)
+    key = jax.random.PRNGKey(0)
+    with pytest.warns(UserWarning, match="never engaged"):
+        bmps.norm_squared(state, _opt(8, "spmd"), key)
+    # auto never warns
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        bmps.norm_squared(state, _opt(8, "auto"), key)
+
+
+def test_bond_one_lattice_fully_uniform_columns():
+    """Bond-dimension-1 PEPS: every column is shape-uniform, including the
+    last one — the plan must still reserve it for the close (regression:
+    jr == ncol used to leave the right chain empty and crash the build)."""
+    state = _state(5, 8, 1)
+    key = jax.random.PRNGKey(3)
+    ref = bmps.norm_squared(state, _bmps(4), key)
+    val = bmps.norm_squared(state, _opt(4, "spmd"), key)
+    auto = bmps.norm_squared(state, _opt(4, "auto"), key)
+    assert _rel(val, ref) <= 1e-10
+    assert _rel(auto, ref) <= 1e-10
+
+
+def test_spmd_layout_independent_of_host_blocking():
+    """The superstep picks its own uniform split — values must not change
+    with the host layout's (n_shards, block)."""
+    state = _state(5, 12, 2)
+    key = jax.random.PRNGKey(5)
+    ref = bmps.norm_squared(state, _bmps(8), key)
+    for n_shards, block in [(2, None), (4, 1), (3, 2)]:
+        val = bmps.norm_squared(state, _opt(8, "spmd", n_shards, block), key)
+        assert _rel(val, ref) <= 1e-10, (n_shards, block)
+
+
+# ------------------------------------------------------- plan machinery ----
+
+def test_plan_confines_specials_to_edge_blocks():
+    state = _state(5, 12, 2)
+    key = jax.random.PRNGKey(7)
+    spmd.clear()
+    bmps.norm_squared(state, _opt(8, "spmd"), key)
+    plans = [p for p in spmd._PLAN_CACHE.values() if p is not None]
+    assert plans
+    for p in plans:
+        assert p.ncol % p.n == 0 and p.w == p.ncol // p.n
+        if p.n > 1:
+            assert p.w >= 2
+            assert 1 <= p.jl <= p.w - 1            # left ramp in block 0
+            assert p.jr >= (p.n - 1) * p.w + 1     # right ramp in block n-1
+            assert p.jr <= p.ncol - 1              # close is always special
+        # containers dominate every true shape (storage-only padding)
+        for c in range(p.ncol):
+            assert all(d <= cd for d, cd in zip(p.sv_shapes[c], p.sv_cont))
+    spmd.clear()
+
+
+def test_superstep_program_cached_across_sweeps():
+    state = _state(5, 8, 2)
+    key = jax.random.PRNGKey(7)
+    spmd.clear()
+    bmps.norm_squared(state, _opt(8, "spmd"), key)
+    st1 = spmd.stats()
+    assert st1["superstep_builds"] >= 1
+    bmps.norm_squared(state, _opt(8, "spmd"), key)
+    st2 = spmd.stats()
+    assert st2["superstep_builds"] == st1["superstep_builds"]  # replayed
+    assert st2["superstep_calls"] == st1["superstep_calls"] + 1
+    assert st2["plans"] == st1["plans"]                        # plan cache
+    spmd.clear()
+
+
+def test_planner_fused_cache_reused_across_modes():
+    """After a single-device warm-up, tracing the superstep replays 100%
+    cached fused refactorizations and einsum paths (the per-column
+    micro-steps present the same network signatures), and a replayed
+    superstep ticks nothing at all — it is one compiled call."""
+    planner.clear()
+    spmd.clear()
+    try:
+        state = _state(5, 8, 2)
+        key = jax.random.PRNGKey(7)
+        bmps.norm_squared(state, _bmps(8), key)            # warm
+        before = planner.stats()
+        bmps.norm_squared(state, _opt(8, "spmd"), key)     # trace superstep
+        delta = planner.stats_since(before)
+        assert delta["fused_misses"] == 0, delta
+        assert delta["path_misses"] == 0, delta
+        assert delta["fused_hits"] > 0, delta
+        before = planner.stats()
+        bmps.norm_squared(state, _opt(8, "spmd"), key)     # compiled replay
+        delta = planner.stats_since(before)
+        assert delta["fused_misses"] == 0, delta
+        # only the host-path (ramp/last) rows tick at dispatch time now
+        assert delta["path_misses"] == 0, delta
+    finally:
+        planner.clear()
+        spmd.clear()
+
+
+def test_stats_and_clear():
+    spmd.clear()
+    st = spmd.stats()
+    assert st["rows_spmd"] == 0 and st["plan_cache_size"] == 0
+    spmd.note_host_rows(3)
+    assert spmd.stats()["rows_host"] == 3
+    spmd.clear()
+    assert spmd.stats()["rows_host"] == 0

@@ -1,23 +1,41 @@
 #!/usr/bin/env python
-"""Doc hygiene: fail on broken intra-repo links in docs/ and README.md.
+"""Doc hygiene: fail on broken intra-repo links and stale code references.
 
-Scans markdown files for inline links/images ``[text](target)`` and
-reference definitions ``[label]: target`` and verifies that every
-*relative* target resolves to an existing file or directory (anchors and
-query strings are stripped; ``http(s)://``, ``mailto:`` and pure-anchor
-links are ignored).  Used by CI and ``make docs-check`` — a link that rots
-when a module or doc moves should fail the build, not a reader.
+Two checks over docs/ and README.md, both static (no repo imports — the CI
+doc job installs nothing):
 
-Exit status: 0 when clean, 1 with a per-link report otherwise.
+1. **Links** — inline links/images ``[text](target)`` and reference
+   definitions ``[label]: target``: every *relative* target must resolve to
+   an existing file or directory (anchors and query strings are stripped;
+   ``http(s)://``, ``mailto:`` and pure-anchor links are ignored).
+2. **Code references** — inline code spans that name repo code must still
+   resolve, because prose references are the main doc-rot vector now that
+   the docs span many files:
+
+   * path-like spans (``core/spmd.py``, ``tests/test_spmd.py::test_x``,
+     ``docs/contraction.md``) must exist under the repo root, ``src/`` or
+     ``src/repro/`` (``::symbol`` additionally checked via ast);
+   * dotted spans whose first component is a repro module or package
+     (``repro.core.spmd``, ``bmps.zipup_block``, ``planner.fused_fn``)
+     must resolve to that module, and a trailing lowercase attribute must
+     be a module-level name (checked by parsing the module with ``ast`` —
+     never by importing).  Spans starting with anything else (``jax.*``,
+     ``np.*``, local variables) are ignored, as are capitalized
+     attributes (class members are out of scope for a static check).
+
+Used by CI (doc-hygiene job) and ``make docs-check``.
+Exit status: 0 when clean, 1 with a per-reference report otherwise.
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 SCAN = [REPO / "README.md", *sorted((REPO / "docs").glob("**/*.md"))]
+SRC = REPO / "src" / "repro"
 
 # inline [text](target) — tolerates one level of nested () in the target;
 # images share the syntax (the leading ! is irrelevant to the target check)
@@ -54,24 +72,142 @@ def check_file(path: Path) -> list:
     return broken
 
 
+# ---------------------------------------------------------------------------
+# Code-reference checking (inline `code` spans)
+# ---------------------------------------------------------------------------
+
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+# a path-like ref: dir/file.py or file.md, optional ::symbol suffix
+_PATH_REF = re.compile(r"^([\w./-]+\.(?:py|md))(?:::(\w+))?$")
+# a dotted ref: module.attr[.attr...], optionally with trailing ()
+_DOTTED_REF = re.compile(r"^([A-Za-z_]\w*(?:\.[A-Za-z_]\w*)+)(?:\(\))?$")
+
+# roots a bare relative path may live under, in resolution order
+_PATH_ROOTS = (REPO, REPO / "src", SRC)
+
+
+def _module_index():
+    """Map basename and dotted names of every repro module/package to its
+    file, e.g. 'bmps' / 'repro.core.bmps' -> src/repro/core/bmps.py.
+    Ambiguous basenames map to None (never checkable by basename alone)."""
+    index = {}
+
+    def add(key, path):
+        index[key] = None if key in index and index[key] != path else path
+
+    for py in SRC.rglob("*.py"):
+        rel = py.relative_to(SRC.parent)
+        dotted = ".".join(rel.with_suffix("").parts)
+        if py.name == "__init__.py":
+            dotted = ".".join(rel.parent.parts)
+            add(dotted, py)
+            add(rel.parent.name, py)
+            continue
+        add(dotted, py)
+        add(py.stem, py)
+    return index
+
+
+def _module_symbols(py: Path):
+    """Module-level names of a python file, via ast (no import)."""
+    try:
+        tree = ast.parse(py.read_text())
+    except SyntaxError:
+        return None
+    names = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[0])
+    return names
+
+
+def _check_path_ref(ref: str, sym) -> bool:
+    for root in _PATH_ROOTS:
+        p = (root / ref)
+        if p.exists():
+            if sym and p.suffix == ".py":
+                names = _module_symbols(p)
+                return names is None or sym in names
+            return True
+    return False
+
+
+def check_code_refs(path: Path, index) -> list:
+    """Stale path-like / dotted code references in ``path``'s inline code."""
+    text = re.sub(r"```.*?```", "", path.read_text(), flags=re.DOTALL)
+    stale = []
+    for m in _CODE_SPAN.finditer(text):
+        span = m.group(1).strip()
+        pm = _PATH_REF.match(span)
+        if pm:
+            if not _check_path_ref(pm.group(1), pm.group(2)):
+                stale.append(span)
+            continue
+        dm = _DOTTED_REF.match(span)
+        if not dm:
+            continue
+        parts = dm.group(1).split(".")
+        # longest prefix that names a known module wins; unknown first
+        # components (jax, np, local variables) are out of scope
+        py = None
+        rest = []
+        for cut in range(len(parts), 0, -1):
+            hit = index.get(".".join(parts[:cut]))
+            if hit is not None:
+                py, rest = hit, parts[cut:]
+                break
+        if py is None:
+            if parts[0] in index:  # ambiguous basename: skip, not stale
+                continue
+            if parts[0] == "repro":  # claims to be ours but is not
+                stale.append(span)
+            continue
+        if not rest:
+            continue
+        if len(rest) > 1 or not rest[0][0].islower():
+            continue  # class attributes / nested chains: out of scope
+        names = _module_symbols(py)
+        if names is not None and rest[0] not in names:
+            stale.append(span)
+    return stale
+
+
 def main() -> int:
     missing_docs = [p for p in SCAN if not p.exists()]
-    all_broken = []
+    index = _module_index()
+    all_broken, all_stale = [], []
     for path in SCAN:
         if not path.exists():
             continue
         for target, resolved in check_file(path):
             all_broken.append((path.relative_to(REPO), target, resolved))
+        for span in check_code_refs(path, index):
+            all_stale.append((path.relative_to(REPO), span))
     for path, target, resolved in all_broken:
         print(f"BROKEN  {path}: ({target}) -> {resolved}", file=sys.stderr)
+    for path, span in all_stale:
+        print(f"STALE   {path}: `{span}` does not resolve against src/repro",
+              file=sys.stderr)
     for path in missing_docs:
         print(f"MISSING {path.relative_to(REPO)}", file=sys.stderr)
     n = len(SCAN) - len(missing_docs)
-    if all_broken or missing_docs:
-        print(f"doc-link check FAILED: {len(all_broken)} broken link(s) "
-              f"across {n} file(s)", file=sys.stderr)
+    if all_broken or all_stale or missing_docs:
+        print(f"doc-link check FAILED: {len(all_broken)} broken link(s), "
+              f"{len(all_stale)} stale code reference(s) across {n} file(s)",
+              file=sys.stderr)
         return 1
-    print(f"doc-link check OK: {n} file(s) clean")
+    print(f"doc-link check OK: {n} file(s) clean (links + code references)")
     return 0
 
 
