@@ -29,6 +29,19 @@ test-distributed:
 	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_distributed.py \
 	    tests/test_spmd.py
 
+# Boundary-engine layer (zipup/variational): refactor-identity goldens,
+# variational accuracy, dispatch, and the SPMD marshalling assertion
+# (which needs >= 2 devices, hence the forced device count).
+.PHONY: test-engines
+test-engines:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_engines.py
+
+# Accuracy-per-FLOP frontier: zip-up vs variational on 4x4 TFI + RQC.
+.PHONY: bench-engines
+bench-engines:
+	PYTHONPATH=src $(PY) benchmarks/bench_engines.py
+
 .PHONY: docs-check
 docs-check:
 	$(PY) tools/check_doc_links.py

@@ -1,0 +1,120 @@
+"""Boundary-engine accuracy-per-FLOP frontier (ISSUE 6 acceptance benchmark).
+
+Zip-up truncation is greedy — the SVD at column j cannot see columns > j —
+while the variational engine ALS-fits the whole boundary row at fixed chi
+(zip-up-seeded).  This benchmark measures what that buys on the two suites
+the repo's accuracy claims live on:
+
+* ``engines/tfi4x4``  — <psi|psi> of an ITE-evolved 4x4 transverse-field
+  Ising PEPS at bond D=3 (two-layer contraction), reference = dense
+  merged-pair contraction;
+* ``engines/rqc4x4``  — one amplitude of a 4x4 PEPS evolved exactly through
+  8 random-circuit layers (one-layer contraction), reference = exact
+  statevector amplitude.
+
+Per (suite, chi, engine) one row reports the relative error and the median
+wall time — together the accuracy-per-FLOP frontier: at equal chi the
+variational engine sits below zip-up in error at a constant-factor time
+premium, i.e. it reaches a given error at smaller chi.  DirectSVD is used
+throughout so the frontier is deterministic and pinnable
+(``benchmarks/baselines/bench_engines.json``); the closing
+``engines/frontier`` row lists every chi where variational beats zip-up —
+non-empty is the pinned acceptance criterion.
+
+Run: ``PYTHONPATH=src python benchmarks/bench_engines.py`` (or
+``make bench-engines``).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+import jax
+
+from benchmarks.common import SCALE, emit, emit_info, save_rows, timeit
+from repro.core import bmps as B
+from repro.core import peps as P
+from repro.core import statevector as sv
+from repro.core.circuits import (apply_circuit_exact_peps,
+                                 apply_circuit_statevector, random_circuit)
+from repro.core.ite import ite_run
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import QRUpdate
+
+ENGINES = ("zipup", "variational")
+
+
+def _frontier(name, chis, errors, times):
+    """Emit per-chi rows + the summary row of chis where variational wins."""
+    wins = [c for c in chis
+            if errors[("variational", c)] < errors[("zipup", c)]]
+    for eng in ENGINES:
+        for chi in chis:
+            emit(f"{name}/chi{chi}/{eng}", times[(eng, chi)],
+                 f"rel_err={errors[(eng, chi)]:.3e}", engine=eng)
+    emit_info(f"{name}/frontier",
+              f"variational_wins_at_chi={':'.join(map(str, wins)) or 'none'}")
+    return wins
+
+
+def bench_tfi():
+    nrow = ncol = 4
+    obs = tfi_hamiltonian(nrow, ncol, jz=-1.0, hx=-3.5)
+    steps = 10 if SCALE == "small" else 30
+    run = ite_run(P.computational_zeros(nrow, ncol), obs, steps=steps,
+                  tau=0.05, update=QRUpdate(rank=3),
+                  contract=B.BMPS(16), measure_every=steps)
+    state = run.state
+    merged = B.merge_layers(state.sites, state.sites)
+    dense = complex(B.contract_exact_onelayer(merged)) * \
+        float(np.exp(2.0 * state.log_scale))
+    emit_info("engines/tfi4x4", f"D=3;dense_norm={abs(dense):.6e}")
+    key = jax.random.PRNGKey(17)
+    chis = (2, 3, 4, 6, 8)
+    errors, times = {}, {}
+    for eng in ENGINES:
+        for chi in chis:
+            opt = B.BMPS(chi, engine=eng)
+            val = complex(B.norm_squared(state, opt, key))
+            errors[(eng, chi)] = abs(val - dense) / abs(dense)
+            times[(eng, chi)] = timeit(
+                lambda o=opt: B.norm_squared(state, o, key))
+    return _frontier("engines/tfi4x4", chis, errors, times)
+
+
+def bench_rqc():
+    n = 4
+    circ = random_circuit(n, n, 8, seed=3)
+    state = apply_circuit_exact_peps(P.computational_zeros(n, n), circ)
+    vec = apply_circuit_statevector(sv.zeros(n * n), circ)
+    bits = np.zeros((n, n), dtype=int)
+    exact = complex(vec[(0,) * (n * n)])
+    emit_info("engines/rqc4x4", f"bond={state.max_bond()};|amp|={abs(exact):.3e}")
+    key = jax.random.PRNGKey(17)
+    chis = (4, 8, 16, 32)
+    errors, times = {}, {}
+    for eng in ENGINES:
+        for chi in chis:
+            opt = B.BMPS(chi, engine=eng)
+            val = complex(B.amplitude(state, bits, opt, key))
+            errors[(eng, chi)] = abs(val - exact) / abs(exact)
+            times[(eng, chi)] = timeit(
+                lambda o=opt: B.amplitude(state, bits, o, key))
+    return _frontier("engines/rqc4x4", chis, errors, times)
+
+
+def main():
+    wins = bench_tfi() + bench_rqc()
+    if not wins:
+        # RuntimeError (not SystemExit) so benchmarks.run records the suite
+        # as failed instead of aborting the whole sweep
+        raise RuntimeError(
+            "acceptance violation: variational never beat zip-up at any chi")
+
+
+if __name__ == "__main__":
+    main()
+    save_rows("bench_engines.json")

@@ -31,16 +31,26 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw) -> floa
     return times[len(times) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = ""):
-    """Print the assignment-mandated CSV row: name,us_per_call,derived."""
+def emit(name: str, seconds: float, derived: str = "", engine: str = None):
+    """Print the assignment-mandated CSV row: name,us_per_call,derived.
+
+    ``engine`` tags the row with the boundary engine that produced it
+    (``"zipup"`` / ``"variational"``); engine-dimensioned suites
+    (bench_engines) set it so baseline JSONs can be compared per engine."""
     us = seconds * 1e6
     print(f"{name},{us:.1f},{derived}")
-    _ROWS.append({"name": name, "us_per_call": us, "derived": derived})
+    row = {"name": name, "us_per_call": us, "derived": derived}
+    if engine is not None:
+        row["engine"] = engine
+    _ROWS.append(row)
 
 
-def emit_info(name: str, derived: str):
+def emit_info(name: str, derived: str, engine: str = None):
     print(f"{name},,{derived}")
-    _ROWS.append({"name": name, "us_per_call": None, "derived": derived})
+    row = {"name": name, "us_per_call": None, "derived": derived}
+    if engine is not None:
+        row["engine"] = engine
+    _ROWS.append(row)
 
 
 def save_rows(fname: str):

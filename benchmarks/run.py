@@ -17,8 +17,8 @@ import time
 import traceback
 
 from benchmarks import (bench_caching, bench_contraction, bench_distributed,
-                        bench_evolution, bench_ite, bench_roofline, bench_rqc,
-                        bench_vqe)
+                        bench_engines, bench_evolution, bench_ite,
+                        bench_roofline, bench_rqc, bench_vqe)
 from benchmarks.common import emit_info, save_rows
 
 SUITES = {
@@ -30,6 +30,7 @@ SUITES = {
     "vqe": bench_vqe,                  # Fig. 14
     "roofline": bench_roofline,        # Fig. 11/12 analogue
     "distributed": bench_distributed,  # paper Section V (ISSUE 4)
+    "engines": bench_engines,          # boundary-engine frontier (ISSUE 6)
 }
 
 

@@ -3,10 +3,14 @@ PEPS contraction (paper Section VI-B, Fig. 10).
 
 Evolves a 4x4 PEPS exactly through 8 RQC layers (bond 16), then contracts
 one amplitude with BMPS and IBMPS at increasing chi, against the exact
-statevector value.
+statevector value.  ``--engine both`` additionally contracts every chi with
+the variational boundary engine and prints the zip-up vs variational error
+gap at equal chi (the accuracy-per-FLOP trade of docs/contraction.md).
 
-    PYTHONPATH=src python examples/rqc_amplitude.py
+    PYTHONPATH=src python examples/rqc_amplitude.py [--engine both]
 """
+import argparse
+
 import numpy as np
 
 from repro.core import bmps as B
@@ -18,6 +22,13 @@ from repro.core.einsumsvd import DirectSVD, RandomizedSVD
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("zipup", "variational", "both"),
+                    default="zipup",
+                    help="boundary engine; 'both' prints the zip-up vs "
+                         "variational error gap at equal chi")
+    args = ap.parse_args()
+
     n, layers = 4, 8
     circ = random_circuit(n, n, layers, seed=7)
     print(f"{n}x{n} RQC, {layers} layers, {len(circ)} gates")
@@ -30,12 +41,22 @@ def main():
     exact = complex(vec[(0,) * (n * n)])
     print(f"exact amplitude <0...0|psi> = {exact:.6e}")
 
+    engines = (("zipup", "variational") if args.engine == "both"
+               else (args.engine,))
     for chi in (4, 8, 16, 32):
-        a_b = complex(B.amplitude(state, bits, B.BMPS(chi, DirectSVD())))
-        a_i = complex(B.amplitude(state, bits,
-                                  B.BMPS(chi, RandomizedSVD(niter=4, oversample=8))))
-        print(f"  chi={chi:3d}: BMPS err {abs(a_b-exact)/abs(exact):.2e}   "
-              f"IBMPS err {abs(a_i-exact)/abs(exact):.2e}")
+        errs = {}
+        for eng in engines:
+            a_b = complex(B.amplitude(state, bits,
+                                      B.BMPS(chi, DirectSVD(), engine=eng)))
+            a_i = complex(B.amplitude(
+                state, bits,
+                B.BMPS(chi, RandomizedSVD(niter=4, oversample=8), engine=eng)))
+            errs[eng] = abs(a_b - exact) / abs(exact)
+            print(f"  chi={chi:3d} [{eng:11s}]: BMPS err {errs[eng]:.2e}   "
+                  f"IBMPS err {abs(a_i-exact)/abs(exact):.2e}")
+        if len(errs) == 2 and errs["variational"] > 0:
+            gap = errs["zipup"] / errs["variational"]
+            print(f"  chi={chi:3d} error gap: zipup/variational = x{gap:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Boundary-MPS contraction of PEPS (paper Alg. 2/3, Section III-B, IV-A).
 
-Three contraction pipelines, all built on the zip-up ``einsumsvd``:
+Three contraction pipelines, all reducing a 2D network to a scalar through
+a pluggable **boundary engine** (:mod:`repro.core.engines`):
 
 * ``contract_onelayer``   — Alg. 2 on a PEPS with no physical indices.
   With ``DirectSVD`` this is the paper's **BMPS**; with ``RandomizedSVD``
@@ -20,21 +21,31 @@ leg ordering).  Boundary-MPS tensors produced here are
 * one-layer: ``(l, d, r)`` — left bond, down (dangling), right bond;
 * two-layer: ``(l, d_bra, d_ket, r)`` — the bra/ket pair axes stay separate.
 
-Shard-local kernels
--------------------
-A zip-up row absorption is built from :func:`zipup_block` /
-:func:`zipup_block_twolayer`: each absorbs a *contiguous block of columns*
-into the boundary, taking the running carry tensor V from the block to its
-left and returning the carry for the block to its right.  ``_zipup_row*``
-run a whole row as one block (``first=last=True``);
-:mod:`repro.core.distributed` composes the same kernels across a device
-mesh with host-issued halos, and :mod:`repro.core.spmd` composes them
-column-at-a-time inside a compiled ``shard_map`` superstep with
-``ppermute`` halos (chi-saturated rows).  Because the kernels are per-site
-identical to the single-device sweep — same einsumsvd subnetworks, same
-PRNG keys — every execution mode reproduces single-device values to
-rounding and replays the same planner cache entries
-(docs/contraction.md walks the full stack).
+Boundary engines
+----------------
+How a row is absorbed at fixed chi is the job of the **engine** named by
+the option's ``engine`` field (default ``"zipup"``):
+
+* ``"zipup"`` (:mod:`repro.core.engines.zipup`) — the paper's zip-up: one
+  einsumsvd per column, greedy truncation.  Its row absorption decomposes
+  into shard-local *column-block kernels* (:func:`zipup_block` /
+  :func:`zipup_block_twolayer`, re-exported here): each absorbs a
+  contiguous block of columns, taking the running carry tensor V from the
+  block to its left and returning the carry for the block to its right.
+  ``_zipup_row*`` run a whole row as one block (``first=last=True``);
+  :mod:`repro.core.distributed` composes the same kernels across a device
+  mesh with host-issued halos, and :mod:`repro.core.spmd` composes them
+  column-at-a-time inside a compiled ``shard_map`` superstep with
+  ``ppermute`` halos (chi-saturated rows).  Because the kernels are
+  per-site identical to the single-device sweep — same einsumsvd
+  subnetworks, same PRNG keys — every execution mode reproduces
+  single-device values to rounding and replays the same planner cache
+  entries (docs/contraction.md walks the full stack).
+* ``"variational"`` (:mod:`repro.core.engines.variational`) — ALS-fitted
+  fixed-chi boundary MPS (zip-up-seeded), globally optimal at fixed chi
+  where zip-up is greedy; more accurate per chi at a constant-factor FLOP
+  premium.  Row-global (no block kernels): distributed sweeps run it
+  row-local, and the SPMD wavefront rejects it.
 
 High-level entry points (``amplitude``/``norm_squared``/``inner`` and the
 ``contract_*`` functions) accept either a :class:`BMPS` option or a
@@ -44,12 +55,28 @@ accordingly.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.einsumsvd import DirectSVD, RandomizedSVD, einsumsvd
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+from repro.core.engines import get_engine
+# Re-exports: the zip-up machinery moved to repro.core.engines.zipup in the
+# engine-layer refactor; these names are part of this module's public
+# surface (distributed/spmd compose the block kernels, tests import the
+# row/scalar helpers) and stay importable from here indefinitely.
+from repro.core.engines.zipup import (  # noqa: F401
+    _init_twolayer_boundary,
+    _keys,
+    _mps_to_scalar,
+    _twolayer_final_scalar,
+    _zipup_row,
+    _zipup_row_twolayer,
+    trivial_twolayer_boundary,
+    zipup_block,
+    zipup_block_twolayer,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,16 +87,25 @@ class BMPS:
     gives IBMPS / two-layer IBMPS.  ``chi`` is the truncation bond dim m.
     ``constrain_carry`` (distributed runs): callable applied to the zip-up
     carry V between einsumsvd steps — used to pin its sharding.
+    ``engine`` selects the boundary-absorption strategy: a registered name
+    (``"zipup"`` — the default greedy truncation — or ``"variational"``,
+    the ALS-fitted boundary) or a :class:`~repro.core.engines.BoundaryEngine`
+    instance for non-default hyper-parameters.
 
     All interior sites of a zip-up row share one network signature, so with
     the (default) fused RandomizedSVD the whole sweep reuses a single
     jit-compiled refactorization per row position class — the planner cache
     (repro.core.planner) turns the per-site einsumsvd into a compiled-call
-    replay across sites, rows, and sweeps.
+    replay across sites, rows, and sweeps.  The variational engine's local
+    updates live in the same cache regime (``planner.fused_fn``).
     """
     chi: int
     svd: object = DirectSVD()
     constrain_carry: object = None
+    engine: object = "zipup"
+
+    def __post_init__(self):
+        get_engine(self.engine)  # fail fast on unknown engines
 
     @classmethod
     def randomized(cls, chi: int, niter: int = 4, oversample: int = 8,
@@ -79,97 +115,29 @@ class BMPS:
                                           fused=fused), **kw)
 
 
-def _keys(key, n):
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    return jax.random.split(key, n)
-
-
 def _distributed_module(option):
     """Return :mod:`repro.core.distributed` iff ``option`` is distributed.
 
     The import is lazy (distributed composes this module's kernels);
     anything that is neither a :class:`BMPS` nor a ``DistributedBMPS`` is a
-    caller bug and raises immediately instead of failing deep in a sweep."""
+    caller bug and raises immediately — a ``TypeError`` naming the accepted
+    option types and the registered boundary engines (the repo's
+    option-dispatch convention) — instead of failing deep in a sweep."""
     if isinstance(option, BMPS):
         return None
     from repro.core import distributed
     if isinstance(option, distributed.DistributedBMPS):
         return distributed
+    from repro.core.engines import registered_engines
     raise TypeError(
-        f"expected BMPS or DistributedBMPS contraction option, got {option!r}")
+        f"unknown contraction option {type(option).__name__!r}: expected a "
+        f"BMPS or DistributedBMPS (engine= one of "
+        f"{sorted(registered_engines())}), got {option!r}")
 
 
 # ---------------------------------------------------------------------------
 # One-layer: PEPS without physical indices, site tensors (u, l, d, r)
 # ---------------------------------------------------------------------------
-
-def zipup_block(v: Optional[jnp.ndarray], svec_block: Sequence[jnp.ndarray],
-                row_block: Sequence[jnp.ndarray], chi: int, svd,
-                keys: Sequence, first: bool, last: bool):
-    """Shard-local one-layer zip-up kernel over a contiguous column block.
-
-    Absorbs ``row_block`` (an MPO slice) into the matching boundary slice
-    ``svec_block``, threading the carry tensor ``v`` (axes ``(a, e, b, c)``:
-    truncated bond, dangling, boundary bond, MPO bond) through the block.
-    ``first`` blocks initialize the carry from column 0 (no truncation);
-    ``last`` blocks close it into the final boundary tensor.
-
-    Returns ``(out, carry)``: the einsumsvd at block-local column ``j``
-    emits the *output boundary tensor of the previous column*, so a block
-    covering columns ``[lo, hi)`` returns tensors for columns
-    ``[lo-1, hi-1)`` (plus column ``hi-1`` when ``last``) and the carry for
-    column ``hi`` (``None`` when ``last``).  ``keys[j]`` must be the row's
-    per-column key for the block's ``j``-th column — the orchestration
-    (single-device or distributed) slices one row-level key split so both
-    execute identical arithmetic.
-    """
-    out: List[jnp.ndarray] = []
-    j0 = 0
-    if first:
-        # V0: contract S_0 (b,f,g) with O_0 (f,c,h,k); left bonds b,c are dim 1.
-        s0, o0 = svec_block[0], row_block[0]
-        v = jnp.einsum("bfg,fchk->bchgk", s0, o0)
-        b, c = v.shape[0], v.shape[1]
-        v = v.reshape(b * c, v.shape[2], v.shape[3], v.shape[4])  # (a, e, b', c')
-        j0 = 1
-    for j in range(j0, len(svec_block)):
-        sj, oj = svec_block[j], row_block[j]
-        left, right = einsumsvd(
-            svd,
-            [v, sj, oj],
-            ["aebc", "bfg", "fchk"],
-            row="ae", col="hgk",
-            rank=chi, absorb="right", key=keys[j],
-        )
-        out.append(left)                       # (a, e, m) == (l, d, r)
-        # right: (m, h, g, k) == next V's (a, e, b, c)
-        v = right
-    if last:
-        # last V: right bonds g,k are dim 1
-        m, h = v.shape[0], v.shape[1]
-        out.append(v.reshape(m, h, v.shape[2] * v.shape[3]))
-        v = None
-    return out, v
-
-
-def _zipup_row(svec: List[jnp.ndarray], row: Sequence[jnp.ndarray], chi: int,
-               svd, key) -> List[jnp.ndarray]:
-    """Alg. 3: approximately apply one PEPS row (as an MPO) to the boundary
-    MPS ``svec``; zip-up with einsumsvd, truncating to ``chi``."""
-    out, _ = zipup_block(None, svec, row, chi, svd, _keys(key, len(svec)),
-                         first=True, last=True)
-    return out
-
-
-def _mps_to_scalar(svec: List[jnp.ndarray]) -> jnp.ndarray:
-    """Contract an MPS whose dangling (d) indices are all dim 1."""
-    acc = jnp.ones((1,), dtype=svec[0].dtype)
-    for t in svec:
-        mat = t.reshape(t.shape[0], t.shape[2])
-        acc = acc @ mat
-    return acc.reshape(())
-
 
 def contract_onelayer(rows: Sequence[Sequence[jnp.ndarray]], option: BMPS,
                       key=None) -> jnp.ndarray:
@@ -177,13 +145,15 @@ def contract_onelayer(rows: Sequence[Sequence[jnp.ndarray]], option: BMPS,
     dist = _distributed_module(option)
     if dist is not None:
         return dist.contract_onelayer(rows, option, key)
+    eng = get_engine(option.engine)
     nrow = len(rows)
     keys = _keys(key, max(nrow, 2))
     # initial boundary MPS = row 0 with u squeezed: (l, d, r)
     svec = [t.reshape(t.shape[1], t.shape[2], t.shape[3]) for t in rows[0]]
     for i in range(1, nrow):
-        svec = _zipup_row(svec, rows[i], option.chi, option.svd, keys[i])
-    return _mps_to_scalar(svec)
+        svec = eng.absorb_onelayer(svec, rows[i], option.chi, option.svd,
+                                   keys[i])
+    return eng.final_scalar_onelayer(svec)
 
 
 def contract_exact_onelayer(rows: Sequence[Sequence[jnp.ndarray]]) -> jnp.ndarray:
@@ -219,105 +189,25 @@ def merge_layers(bra_rows, ket_rows) -> List[List[jnp.ndarray]]:
 # Two-layer: <bra|ket> with layers kept implicit (two-layer IBMPS)
 # ---------------------------------------------------------------------------
 
-def zipup_block_twolayer(v: Optional[jnp.ndarray],
-                         svec_block: Sequence[jnp.ndarray],
-                         bra_block, ket_block, chi: int, svd,
-                         keys: Sequence, first: bool, last: bool,
-                         constrain_carry=None):
-    """Shard-local two-layer zip-up kernel over a contiguous column block.
-
-    The two-layer sibling of :func:`zipup_block`; identical block/carry
-    semantics, with carry axes ``(a, e1, e2, b, c1, c2)`` (truncated bond,
-    bra/ket dangling, boundary bond, bra/ket pair bonds).  Boundary tensors
-    are truncated; the row's pair bonds (c1,c2 / k1,k2) stay separate — the
-    implicit structure that gives two-layer IBMPS its complexity edge
-    (Table II).  The carry is the only tensor a distributed sweep ships
-    between neighboring shards (the forward halo)."""
-    out: List[jnp.ndarray] = []
-    j0 = 0
-    if first:
-        tb0, tk0 = bra_block[0].conj(), ket_block[0]
-        s0 = svec_block[0]
-        # S_0:(b,f1,f2,g), bra:(p,f1,c1,h1,k1), ket:(p,f2,c2,h2,k2); b,c1,c2 dim 1
-        v = jnp.einsum("bfFg,pfchk,pFCHK->bcChHgkK", s0, tb0, tk0,
-                       optimize="optimal")
-        sh = v.shape
-        v = v.reshape(sh[0] * sh[1] * sh[2], sh[3], sh[4], sh[5], sh[6], sh[7])
-        # v: (a, e1, e2, b, c1, c2)
-        j0 = 1
-    for j in range(j0, len(svec_block)):
-        sj = svec_block[j]
-        tb, tk = bra_block[j].conj(), ket_block[j]
-        left, right = einsumsvd(
-            svd,
-            [v, sj, tb, tk],
-            ["aeEbcC", "bfFg", "pfchk", "pFCHK"],
-            row="aeE", col="hHgkK",
-            rank=chi, absorb="right", key=keys[j],
-        )
-        out.append(left)                       # (a, e1, e2, m)
-        v = right                              # (m, h1, h2, g, k1, k2)
-        if constrain_carry is not None:
-            v = constrain_carry(v)
-    if last:
-        m = v.shape[0]
-        out.append(v.reshape(m, v.shape[1], v.shape[2],
-                             v.shape[3] * v.shape[4] * v.shape[5]))
-        v = None
-    return out, v
-
-
-def _zipup_row_twolayer(svec: List[jnp.ndarray], bra_row, ket_row, chi, svd,
-                        key, constrain_carry=None) -> List[jnp.ndarray]:
-    """One full row absorption = :func:`zipup_block_twolayer` as one block."""
-    out, _ = zipup_block_twolayer(None, svec, bra_row, ket_row, chi, svd,
-                                  _keys(key, len(svec)), first=True, last=True,
-                                  constrain_carry=constrain_carry)
-    return out
-
-
-def _init_twolayer_boundary(bra_row, ket_row) -> List[jnp.ndarray]:
-    """First-row boundary: merge only the horizontal pair bonds."""
-    out = []
-    for tb, tk in zip(bra_row, ket_row):
-        # (p,1,l1,d1,r1)* x (p,1,l2,d2,r2) -> (l1 l2, d1, d2, r1 r2)
-        pair = jnp.einsum("puldr,pULDR->lLdDrR", tb.conj(), tk)
-        s = pair.shape
-        out.append(pair.reshape(s[0] * s[1], s[2], s[3], s[4] * s[5]))
-    return out
-
-
-def _twolayer_final_scalar(svec: List[jnp.ndarray]) -> jnp.ndarray:
-    acc = jnp.ones((1,), dtype=svec[0].dtype)
-    for t in svec:
-        mat = t.reshape(t.shape[0], t.shape[-1])
-        acc = acc @ mat
-    return acc.reshape(())
-
-
-def trivial_twolayer_boundary(ncol: int, dtype) -> List[jnp.ndarray]:
-    one = jnp.ones((1, 1, 1, 1), dtype=dtype)
-    return [one for _ in range(ncol)]
-
-
 def contract_twolayer(bra_rows, ket_rows, option: BMPS, key=None) -> jnp.ndarray:
     """<bra|ket> keeping the two layers implicit.
 
     ``bra_rows``/``ket_rows`` are grids of (p,u,l,d,r) site tensors.  The bra
     is conjugated internally.  The sweep starts from a trivial boundary so the
-    FIRST row is zip-up-truncated as well — the boundary bond never exceeds
-    chi (the merged-pair r^4 init the naive path would carry is avoided)."""
+    FIRST row is truncated as well — the boundary bond never exceeds chi
+    (the merged-pair r^4 init the naive path would carry is avoided)."""
     dist = _distributed_module(option)
     if dist is not None:
         return dist.contract_twolayer(bra_rows, ket_rows, option, key)
+    eng = get_engine(option.engine)
     nrow = len(bra_rows)
     keys = _keys(key, max(nrow, 2))
     svec = trivial_twolayer_boundary(len(bra_rows[0]), bra_rows[0][0].dtype)
     for i in range(nrow):
-        svec = _zipup_row_twolayer(svec, bra_rows[i], ket_rows[i],
+        svec = eng.absorb_twolayer(svec, bra_rows[i], ket_rows[i],
                                    option.chi, option.svd, keys[i],
                                    option.constrain_carry)
-    return _twolayer_final_scalar(svec)
+    return eng.final_scalar_twolayer(svec)
 
 
 # ---------------------------------------------------------------------------

@@ -101,6 +101,7 @@ import numpy as np
 
 from repro.core.bmps import _keys, zipup_block, zipup_block_twolayer
 from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+from repro.core.engines import get_engine
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +169,14 @@ class DistributedBMPS:
 
     All three modes execute the identical einsumsvd sequence — mode choice
     is pure scheduling and never changes values beyond rounding.
+
+    ``engine`` mirrors :class:`~repro.core.bmps.BMPS`: any registered
+    boundary engine (name or instance).  Engines without block structure
+    (``supports_blocks=False``, e.g. ``"variational"``) cannot be scheduled
+    shard-locally — the halo pipeline runs their row absorptions row-local
+    on the default device, sandwiched between the sharded layout, and the
+    SPMD wavefront rejects them at construction (the superstep *is* the
+    block contract compiled; see docs/contraction.md).
     """
     chi: int
     svd: object = DirectSVD()
@@ -175,12 +184,21 @@ class DistributedBMPS:
     block: Optional[int] = None
     devices: Tuple = ()
     wavefront: str = "host"
+    engine: object = "zipup"
 
     def __post_init__(self):
         if self.wavefront not in ("host", "spmd", "auto"):
             raise ValueError(
                 f"wavefront must be 'host', 'spmd' or 'auto', "
                 f"got {self.wavefront!r}")
+        eng = get_engine(self.engine)  # fail fast on unknown engines
+        if self.wavefront != "host" and not eng.supports_blocks:
+            raise ValueError(
+                f"wavefront={self.wavefront!r} requires a block-capable "
+                f"boundary engine (the compiled SPMD superstep schedules "
+                f"shard-local column blocks), but engine {eng.name!r} has "
+                f"supports_blocks=False — use wavefront='host', which runs "
+                f"such engines row-local.")
 
     @classmethod
     def randomized(cls, chi: int, niter: int = 4, oversample: int = 8,
@@ -317,8 +335,18 @@ def _sweep_rows(svec_cols, grids, option: DistributedBMPS, layout, devices,
     ``collect=True`` returns one gathered boundary level per row (for
     environment sweeps).  The wavefront mode decides the dispatch; values
     are mode-independent (same einsumsvd sequence everywhere).
+
+    Engines without block kernels (``supports_blocks=False``) cannot run
+    the halo protocol: their rows are absorbed row-local on the default
+    device — gather boundary + row, absorb, re-scatter to the owners —
+    producing exactly the single-device values (``wavefront != "host"``
+    was already rejected at option construction for such engines).
     """
     nrow = len(grids[0])
+    eng = get_engine(option.engine)
+    if not eng.supports_blocks:
+        return _sweep_rows_rowlocal(eng, svec_cols, grids, option, layout,
+                                    devices, row_keys, kernel_name, collect)
     mode = option.wavefront
     spmd_mod = None
     if mode != "host":
@@ -373,6 +401,36 @@ def _sweep_rows(svec_cols, grids, option: DistributedBMPS, layout, devices,
             "for this lattice/device set) — the whole sweep ran on the "
             "explicit-placement host pipeline. Use wavefront='auto' to "
             "silence this.", stacklevel=3)
+    return svec_cols, levels
+
+
+def _sweep_rows_rowlocal(eng, svec_cols, grids, option: DistributedBMPS,
+                         layout, devices, row_keys, kernel_name: str,
+                         collect: bool):
+    """Row-local sweep for engines without block kernels (see _sweep_rows).
+
+    Each row is gathered to the default device, absorbed by the engine
+    exactly as on the single-device path (same key per row), and the new
+    boundary is re-scattered to the column owners, so the sweep stays
+    layout-compatible with every downstream consumer."""
+    nrow = len(grids[0])
+    d0 = jax.local_devices()[0]
+    levels = []
+    for i in range(nrow):
+        svec_g = gather_columns(svec_cols, d0)
+        if kernel_name == "twolayer":
+            bra_g = gather_columns(grids[0][i], d0)
+            ket_g = (bra_g if grids[1] is grids[0]
+                     else gather_columns(grids[1][i], d0))
+            svec_g = eng.absorb_twolayer(svec_g, bra_g, ket_g, option.chi,
+                                         option.svd, row_keys[i])
+        else:
+            svec_g = eng.absorb_onelayer(svec_g, gather_columns(grids[0][i], d0),
+                                         option.chi, option.svd, row_keys[i])
+        svec_cols = [jax.device_put(t, _owner_device(layout, devices, c))
+                     for c, t in enumerate(svec_g)]
+        if collect:
+            levels.append(gather_columns(svec_cols))
     return svec_cols, levels
 
 

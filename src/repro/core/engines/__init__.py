@@ -1,0 +1,135 @@
+"""Pluggable boundary-absorption engines for the contraction stack.
+
+The bottleneck of every contraction this library performs is the same
+operation: absorb one PEPS row (an MPO) into the boundary MPS while keeping
+the boundary bond at chi.  Historically exactly one strategy existed —
+zip-up truncation with (randomized) einsumsvd — and it was hard-wired into
+``core/bmps.py``, ``core/distributed.py``, ``core/spmd.py`` and
+``core/environments.py``.  This package makes the strategy a first-class,
+pluggable **boundary engine**:
+
+* :mod:`repro.core.engines.zipup` — the extracted zip-up machinery
+  (bit-identical to the pre-refactor code; the default);
+* :mod:`repro.core.engines.variational` — a fixed-chi boundary MPS
+  optimized by ALS fitting sweeps against the implicitly row-absorbed
+  MPO·MPS (Lubasch-style local updates, arXiv:1405.3259; the
+  variational/CTMRG-style family of arXiv:2110.12726), seeded from a cheap
+  zip-up pass.  Globally optimal at fixed chi where zip-up is greedy.
+
+Engine contract (:class:`BoundaryEngine`)
+-----------------------------------------
+An engine supplies **row absorption** for the one- and two-layer networks
+plus the **final-scalar** closings, under three cross-cutting contracts:
+
+1. *Key contract* — absorption consumes exactly one PRNG key per row and
+   derives any per-column keys via ``jax.random.split(key, ncol)``, so a
+   given ``(engine, key)`` pair is deterministic and every execution mode
+   can reproduce it.
+2. *Planner-signature contract* — all inner einsums/solvers must route
+   through :mod:`repro.core.planner` (``cached_einsum`` / ``int_einsum`` /
+   ``fused_fn`` / ``fused_randomized_svd``) keyed by network signature, so
+   structurally-equal work replays compiled code across columns, rows and
+   sweeps (hit rates > 99% after warm-up — asserted in tests).
+3. *Block contract (optional)* — ``supports_blocks = True`` engines expose
+   their row absorption as composable column-block kernels with a single
+   carry tensor (``zipup_block*``); only such engines can run on the
+   distributed halo-exchange pipeline shard-locally and inside the
+   compiled SPMD superstep.  Engines without block structure still work
+   with :class:`~repro.core.distributed.DistributedBMPS` — rows run
+   engine-local on one device, sandwiched between the sharded layout — but
+   the SPMD wavefront rejects them with a :class:`ValueError`.
+
+Selecting an engine
+-------------------
+``BMPS`` / ``DistributedBMPS`` carry an ``engine`` field accepting either a
+registered name (``"zipup"``, ``"variational"``) or an engine instance
+(e.g. ``VariationalEngine(sweeps=4)`` for non-default hyper-parameters)::
+
+    norm_squared(state, BMPS.randomized(16, engine="variational"))
+
+``get_engine`` resolves the field; unknown names/objects raise a
+``TypeError`` listing the registered engines (the repo-wide option-dispatch
+convention, cf. ``peps.check_update``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class BoundaryEngine:
+    """Base class / protocol for boundary-absorption engines.
+
+    Subclasses set ``name`` (the registry key) and ``supports_blocks``
+    (whether the distributed halo pipeline / SPMD superstep can schedule
+    the engine shard-locally), and implement the four methods below.  The
+    boundary-MPS tensor layouts are fixed across engines — one-layer
+    ``(l, d, r)``, two-layer ``(l, d_bra, d_ket, r)`` — so engines are
+    interchangeable mid-stack (environments produced by one engine close
+    under another, etc.).
+    """
+
+    name: str = "abstract"
+    supports_blocks: bool = False
+
+    def absorb_onelayer(self, svec, row, chi, svd, key) -> List:
+        """Absorb an (u,l,d,r)-site MPO row into the one-layer boundary."""
+        raise NotImplementedError
+
+    def absorb_twolayer(self, svec, bra_row, ket_row, chi, svd, key,
+                        constrain_carry=None) -> List:
+        """Absorb a bra/ket row pair ((p,u,l,d,r) sites) into the two-layer
+        boundary.  The bra is conjugated by the engine."""
+        raise NotImplementedError
+
+    def final_scalar_onelayer(self, svec):
+        """Close a fully-absorbed one-layer boundary (dangling dims 1)."""
+        raise NotImplementedError
+
+    def final_scalar_twolayer(self, svec):
+        """Close a fully-absorbed two-layer boundary (dangling dims 1)."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, BoundaryEngine] = {}
+
+
+def register_engine(engine: BoundaryEngine) -> BoundaryEngine:
+    """Add an engine to the registry under ``engine.name`` (last wins)."""
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def registered_engines() -> Dict[str, BoundaryEngine]:
+    """Copy of the name -> engine registry (triggers built-in registration)."""
+    _ensure_builtin()
+    return dict(_REGISTRY)
+
+
+def _ensure_builtin() -> None:
+    # Built-in engines live in submodules that import this module; register
+    # them lazily on first lookup to keep import order acyclic.
+    if "zipup" not in _REGISTRY:
+        from repro.core.engines import zipup  # noqa: F401
+    if "variational" not in _REGISTRY:
+        from repro.core.engines import variational  # noqa: F401
+
+
+def get_engine(engine) -> BoundaryEngine:
+    """Resolve an ``engine`` option value to a :class:`BoundaryEngine`.
+
+    Accepts a registered name (str) or an engine instance; anything else is
+    a caller bug and raises a ``TypeError`` naming the registered engines
+    (the library's option-dispatch convention — no isinstance asserts)."""
+    _ensure_builtin()
+    if isinstance(engine, BoundaryEngine):
+        return engine
+    if isinstance(engine, str):
+        hit = _REGISTRY.get(engine)
+        if hit is not None:
+            return hit
+        raise TypeError(
+            f"unknown boundary engine {engine!r}: registered engines are "
+            f"{sorted(_REGISTRY)}")
+    raise TypeError(
+        f"expected a boundary-engine name or BoundaryEngine instance, got "
+        f"{engine!r}: registered engines are {sorted(_REGISTRY)}")

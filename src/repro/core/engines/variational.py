@@ -1,0 +1,292 @@
+"""Variational boundary engine: ALS-fitted fixed-chi boundary MPS.
+
+Where the zip-up engine truncates **greedily** — the einsumsvd at column
+``j`` picks the best rank-chi split of everything absorbed so far, blind to
+the columns still to its right — this engine solves the **global** fixed-chi
+problem for one row absorption:
+
+    minimize  || B  -  O · S ||_F   over MPS B with bond <= chi,
+
+where ``O · S`` is the (implicitly represented, never materialized) product
+of the PEPS row MPO with the incoming boundary MPS.  The optimization is
+alternating least squares in site-canonical gauge (the MPO–MPS fitting of
+Lubasch et al., arXiv:1405.3259; the variational boundary family surveyed
+in Vanderstraeten et al., arXiv:2110.12726): with every tensor of ``B``
+except site ``j`` held fixed and the complement kept orthonormal (mixed
+canonical form), the optimal ``B_j`` is the plain projection
+
+    B_j  =  L_j · (S_j O_j) · R_{j+1},
+
+with ``L/R`` the left/right fit environments.  A left-to-right pass
+QR-shifts the canonical center as it updates; a right-to-left pass mirrors
+it; ``sweeps`` such round trips monotonically decrease the fit residual.
+The initial guess is a cheap **zip-up pass** (the zipup engine itself, same
+``svd`` option and PRNG key), so one sweep already starts from the greedy
+solution and can only improve the Frobenius residual.
+
+Cost: each local update contracts the same ``[L, S_j, (O_j|bra,ket), R]``
+neighborhood the zip-up einsumsvd sees, so a full absorption costs
+``O(sweeps)`` zip-up-like row passes plus the seed — the engine buys
+accuracy per chi at a constant-factor FLOP premium (benchmarked in
+``benchmarks/bench_engines.py``).
+
+Planner contract: every environment step and local update is one function
+``jax.jit``-compiled per **network signature** through
+:func:`repro.core.planner.fused_fn` (tag ``"varfit"``), and every einsum
+inside routes through :func:`repro.core.planner.cached_einsum` (path
+cache).  All interior columns of a row share one signature, so after a
+one-row warm-up the sweeps replay compiled executables across columns,
+rows, and repeated absorptions — the same > 99% hit-rate regime as the
+fused zip-up (asserted in ``tests/test_engines.py``).
+
+No block/carry structure: an ALS sweep needs the whole row (it is a global
+solve), so ``supports_blocks = False`` — the distributed pipeline runs
+this engine row-local on one device between sharded layouts, and the SPMD
+superstep rejects it (see docs/contraction.md, mode decision table).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner
+from repro.core.engines import BoundaryEngine, register_engine
+
+
+def _fused(tag: str, builder, *tensors):
+    """Run ``builder()``'s function on ``tensors``, jit-fused per signature.
+
+    The signature is the operand shape/dtype tuple plus the device backend —
+    every trace-time decision of these fixed-structure einsum+QR steps."""
+    sig = (tuple(tuple(t.shape) for t in tensors),
+           tuple(jnp.dtype(t.dtype).name for t in tensors),
+           jax.default_backend())
+    fn = planner.fused_fn(tag, sig, builder)
+    return fn(*tensors)
+
+
+def _qr_shift_right(b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """QR of ``b`` matricized as (left+dangles, right): returns
+    (left-orthonormal Q with b's layout, r to absorb rightwards)."""
+    m = b.shape[-1]
+    mat = b.reshape(-1, m)
+    q, r = jnp.linalg.qr(mat)
+    return q.reshape(b.shape[:-1] + (q.shape[-1],)), r
+
+
+def _lq_shift_left(b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LQ of ``b`` matricized as (left, dangles+right): returns
+    (r to absorb leftwards, right-orthonormal Q with b's layout)."""
+    a = b.shape[0]
+    mat = b.reshape(a, -1)
+    qh, rh = jnp.linalg.qr(mat.conj().T)
+    q = qh.conj().T            # (k, dangles*right), right-orthonormal rows
+    r = rh.conj().T            # (a, k)
+    return r, q.reshape((q.shape[0],) + b.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Per-site fit steps.  ``site`` is (s_j, o_j) one-layer or (s_j, bra_j,
+# ket_j) two-layer; the T-network einsum strings below mirror the zip-up
+# kernels' label conventions (see engines/zipup.py).
+# ---------------------------------------------------------------------------
+
+_NETS = {
+    # nsite tensors: (M from left, B from M·R, L-advance, M from right,
+    #                 B from L·M, R-advance)
+    2: {  # one-layer: s (b,f,g)=(l,d,r), o (f,c,h,k)=(u,l,d,r)
+        "Ml": ("bca,bfg,fchk->ahgk", "ahgk,gkm->ahm", "ahgk,ahn->gkn"),
+        "Mr": ("gkm,bfg,fchk->bchm", "bca,bchm->ahm", "bchm,nhm->bcn"),
+    },
+    3: {  # two-layer: s (b,f,F,g), bra* (p,f,c,h,k), ket (p,F,C,H,K)
+        "Ml": ("bcCa,bfFg,pfchk,pFCHK->ahHgkK", "ahHgkK,gkKm->ahHm",
+               "ahHgkK,ahHn->gkKn"),
+        "Mr": ("gkKm,bfFg,pfchk,pFCHK->bcChHm", "bcCa,bcChHm->ahHm",
+               "bcChHm,nhHm->bcCn"),
+    },
+}
+
+
+def _site_tensors(site: Sequence[jnp.ndarray]) -> List[jnp.ndarray]:
+    """The T-network operands for one column (bra conjugated, two-layer)."""
+    if len(site) == 3:
+        s, bra, ket = site
+        return [s, bra.conj(), ket]
+    return list(site)
+
+
+def _step_lr(L, site, R, last: bool):
+    """One left-to-right local update: fit ``B_j``, QR-shift, advance L.
+
+    Returns ``(B_j, L_next)``; at the last site the un-orthogonalized fit
+    (carrying the norm) is kept and ``L_next`` is None."""
+    ops = _site_tensors(site)
+    net = _NETS[len(ops)]["Ml"]
+
+    if last:
+        def build():
+            @jax.jit
+            def run(L, *rest):
+                R = rest[-1]
+                m = planner.cached_einsum(net[0], L, *rest[:-1])
+                return planner.cached_einsum(net[1], m, R)
+            return run
+        return _fused("varfit_lr_last", build, L, *ops, R), None
+
+    def build():
+        @jax.jit
+        def run(L, *rest):
+            R = rest[-1]
+            m = planner.cached_einsum(net[0], L, *rest[:-1])
+            b = planner.cached_einsum(net[1], m, R)
+            q, _ = _qr_shift_right(b)
+            return q, planner.cached_einsum(net[2], m, q.conj())
+        return run
+    return _fused("varfit_lr", build, L, *ops, R)
+
+
+def _step_rl(R, site, L, first: bool):
+    """One right-to-left local update: fit ``B_j``, LQ-shift, advance R.
+
+    Returns ``(B_j, R_prev)``; at the first site the full fit is kept."""
+    ops = _site_tensors(site)
+    net = _NETS[len(ops)]["Mr"]
+
+    if first:
+        def build():
+            @jax.jit
+            def run(R, *rest):
+                L = rest[-1]
+                m = planner.cached_einsum(net[0], R, *rest[:-1])
+                return planner.cached_einsum(net[1], L, m)
+            return run
+        return _fused("varfit_rl_first", build, R, *ops, L), None
+
+    def build():
+        @jax.jit
+        def run(R, *rest):
+            L = rest[-1]
+            m = planner.cached_einsum(net[0], R, *rest[:-1])
+            b = planner.cached_einsum(net[1], L, m)
+            _, q = _lq_shift_left(b)
+            return q, planner.cached_einsum(net[2], m, q.conj())
+        return run
+    return _fused("varfit_rl", build, R, *ops, L)
+
+
+def _renv_step(R, site, b):
+    """Extend the right fit environment over one column (uses conj(b))."""
+    ops = _site_tensors(site)
+    net = _NETS[len(ops)]["Mr"]
+
+    def build():
+        @jax.jit
+        def run(R, *rest):
+            b_ = rest[-1]
+            m = planner.cached_einsum(net[0], R, *rest[:-1])
+            return planner.cached_einsum(net[2], m, b_.conj())
+        return run
+    return _fused("varfit_renv", build, R, *ops, b)
+
+
+def _canonicalize_right(bs: List[jnp.ndarray]) -> List[jnp.ndarray]:
+    """Right-canonicalize an MPS in place (LQ sweep, right to left)."""
+    bs = list(bs)
+    for j in range(len(bs) - 1, 0, -1):
+        def build():
+            @jax.jit
+            def run(prev, cur):
+                r, q = _lq_shift_left(cur)
+                nprev = jnp.tensordot(prev, r, axes=[[prev.ndim - 1], [0]])
+                return nprev, q
+            return run
+        bs[j - 1], bs[j] = _fused("varfit_canon", build, bs[j - 1], bs[j])
+    return bs
+
+
+class VariationalEngine(BoundaryEngine):
+    """ALS boundary-MPS fitting engine (module docstring has the math).
+
+    Parameters
+    ----------
+    sweeps: full ALS round trips (left-to-right + right-to-left) per row
+        absorption.  ``sweeps=0`` degenerates to the zip-up seed itself
+        (useful for A/B isolation of the fitting gain).
+    """
+
+    name = "variational"
+    supports_blocks = False
+
+    def __init__(self, sweeps: int = 2):
+        if sweeps < 0:
+            raise ValueError(f"sweeps must be >= 0, got {sweeps}")
+        self.sweeps = sweeps
+
+    def __repr__(self):
+        return f"VariationalEngine(sweeps={self.sweeps})"
+
+    # -- fitting core -------------------------------------------------------
+
+    def _fit(self, sites: List[Sequence[jnp.ndarray]],
+             seed: List[jnp.ndarray]) -> List[jnp.ndarray]:
+        """ALS-fit an MPS (seeded by ``seed``) to the column network
+        ``sites`` (per column: the T-network operand tuple)."""
+        ncol = len(sites)
+        if ncol < 2 or self.sweeps == 0:
+            return seed    # a single column is exact; sweeps=0 is the seed
+        nb = len(_site_tensors(sites[0])) + 1  # env rank: bonds + B bond
+        dtype = seed[0].dtype
+        triv = jnp.ones((1,) * nb, dtype=dtype)
+        bs = _canonicalize_right(seed)
+        renvs: List = [None] * (ncol + 1)
+        renvs[ncol] = triv
+        for j in range(ncol - 1, 0, -1):
+            renvs[j] = _renv_step(renvs[j + 1], sites[j], bs[j])
+        for _ in range(self.sweeps):
+            # left-to-right pass (leaves bs left-canonical, center at -1)
+            lenvs: List = [triv] + [None] * ncol
+            for j in range(ncol):
+                lastp = j == ncol - 1
+                bj, ln = _step_lr(lenvs[j], sites[j], renvs[j + 1], lastp)
+                bs[j] = bj
+                if not lastp:
+                    lenvs[j + 1] = ln
+            # right-to-left pass (leaves bs right-canonical, center at 0,
+            # and rebuilds renvs for the next sweep)
+            for j in range(ncol - 1, -1, -1):
+                firstp = j == 0
+                bj, rn = _step_rl(renvs[j + 1], sites[j], lenvs[j], firstp)
+                bs[j] = bj
+                if not firstp:
+                    renvs[j] = rn
+        return bs
+
+    # -- BoundaryEngine interface -------------------------------------------
+
+    def absorb_onelayer(self, svec, row, chi, svd, key):
+        from repro.core.engines.zipup import _zipup_row
+        seed = _zipup_row(svec, row, chi, svd, key)
+        return self._fit([(svec[j], row[j]) for j in range(len(svec))], seed)
+
+    def absorb_twolayer(self, svec, bra_row, ket_row, chi, svd, key,
+                        constrain_carry=None):
+        # constrain_carry pins the *zip-up* carry's sharding; the ALS pass
+        # is row-local (no carry), so it only applies to the seed.
+        from repro.core.engines.zipup import _zipup_row_twolayer
+        seed = _zipup_row_twolayer(svec, bra_row, ket_row, chi, svd, key,
+                                   constrain_carry=constrain_carry)
+        return self._fit([(svec[j], bra_row[j], ket_row[j])
+                          for j in range(len(svec))], seed)
+
+    def final_scalar_onelayer(self, svec):
+        from repro.core.engines.zipup import _mps_to_scalar
+        return _mps_to_scalar(svec)
+
+    def final_scalar_twolayer(self, svec):
+        from repro.core.engines.zipup import _twolayer_final_scalar
+        return _twolayer_final_scalar(svec)
+
+
+register_engine(VariationalEngine())

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import planner
-from repro.core.bmps import BMPS, _zipup_row_twolayer, trivial_twolayer_boundary
+from repro.core.bmps import BMPS, trivial_twolayer_boundary
+from repro.core.engines import get_engine
 
 
 #: Seed of the PRNG key used when an environment sweep is called with
@@ -62,13 +63,14 @@ def top_environments(bra_rows, ket_rows, option: BMPS, key=None) -> List[List[jn
     dist = _distributed_module(option)
     if dist is not None:
         return dist.top_environments(bra_rows, ket_rows, option, key)
+    eng = get_engine(option.engine)
     nrow, ncol = len(bra_rows), len(bra_rows[0])
     dtype = bra_rows[0][0].dtype
     keys = jax.random.split(key, max(nrow, 2))
     envs = [trivial_env(ncol, dtype)]
     svec = trivial_twolayer_boundary(ncol, dtype)
     for i in range(nrow):
-        svec = _zipup_row_twolayer(svec, bra_rows[i], ket_rows[i],
+        svec = eng.absorb_twolayer(svec, bra_rows[i], ket_rows[i],
                                    option.chi, option.svd, keys[i])
         envs.append(svec)
     return envs

@@ -545,29 +545,57 @@ def absorb_rows(kernel, svec_cols, grid_slices, chi, svd, plan: RowPlan,
     R = len(row_keys)
     ncol = plan.ncol
     mdevs = _distinct_devices(devices)[:plan.n]
-    dev0 = mdevs[0]
-    svg = jnp.stack([_grow(jax.device_put(t, dev0), plan.sv_cont)
-                     for t in svec_cols])
-    keys_g = jnp.stack([_keys(jax.device_put(k, dev0), ncol)
-                        for k in row_keys])
     sites_g: List = []
-    for k, g in enumerate(grid_slices):
-        if k and g is grid_slices[0]:
-            sites_g.append(sites_g[0])
-            continue
-        sites_g.append(jnp.stack([
-            jnp.stack([_grow(jax.device_put(g[i][c], dev0),
-                             plan.site_cont[k]) for c in range(ncol)])
-            for i in range(R)]))
-    if plan.n > 1:
-        # lay the stacked globals out over the superstep mesh (the stacks
-        # were built on dev0; this is the one entry-time redistribution)
+    if plan.n == 1:
+        dev0 = mdevs[0]
+        svg = jnp.stack([_grow(jax.device_put(t, dev0), plan.sv_cont)
+                         for t in svec_cols])
+        keys_g = jnp.stack([_keys(jax.device_put(k, dev0), ncol)
+                            for k in row_keys])
+        for k, g in enumerate(grid_slices):
+            if k and g is grid_slices[0]:
+                sites_g.append(sites_g[0])
+                continue
+            sites_g.append(jnp.stack([
+                jnp.stack([_grow(jax.device_put(g[i][c], dev0),
+                                 plan.site_cont[k]) for c in range(ncol)])
+                for i in range(R)]))
+    else:
+        # Marshal each shard's column chunk DIRECTLY on its owner device and
+        # assemble the global arrays with make_array_from_single_device_arrays
+        # — nothing stages through device 0 (each operand moves at most once,
+        # from wherever the halo pipeline left it to its superstep owner).
         from jax.sharding import NamedSharding
         mesh = col_mesh(mdevs)
-        svg = jax.device_put(svg, NamedSharding(mesh, P(_AXIS)))
-        keys_g = jax.device_put(keys_g, NamedSharding(mesh, P(None, _AXIS)))
-        sites_g = [jax.device_put(g, NamedSharding(mesh, P(None, _AXIS)))
-                   for g in sites_g]
+        n, w = plan.n, plan.w
+
+        def assemble(gshape, spec, locals_):
+            return jax.make_array_from_single_device_arrays(
+                gshape, NamedSharding(mesh, spec), locals_)
+
+        svg = assemble((ncol,) + plan.sv_cont, P(_AXIS), [
+            jnp.stack([_grow(jax.device_put(svec_cols[c], mdevs[s]),
+                             plan.sv_cont) for c in range(s * w, (s + 1) * w)])
+            for s in range(n)])
+        # per-row column keys: the split is computed once (deterministic on
+        # any device) and each shard receives only its chunk
+        keys_rows = [_keys(k, ncol) for k in row_keys]
+        keys_g = assemble((R,) + keys_rows[0].shape, P(None, _AXIS), [
+            jax.device_put(jnp.stack([kr[s * w:(s + 1) * w]
+                                      for kr in keys_rows]), mdevs[s])
+            for s in range(n)])
+        for k, g in enumerate(grid_slices):
+            if k and g is grid_slices[0]:
+                sites_g.append(sites_g[0])
+                continue
+            sites_g.append(assemble((R, ncol) + plan.site_cont[k],
+                                    P(None, _AXIS), [
+                jnp.stack([
+                    jnp.stack([_grow(jax.device_put(g[i][c], mdevs[s]),
+                                     plan.site_cont[k])
+                               for c in range(s * w, (s + 1) * w)])
+                    for i in range(R)])
+                for s in range(n)]))
     fn = _get_fn(kernel, chi, svd, plan, R, collect, mdevs)
     res = fn(svg, keys_g, *sites_g)
     _STATS["superstep_calls"] += 1

@@ -1,0 +1,285 @@
+"""Boundary-engine layer: refactor equivalence, variational accuracy, dispatch.
+
+Three contracts (see repro/core/engines/__init__.py and ISSUE 6):
+
+1. **Refactor identity** — zip-up routed through the engine layer is
+   bit-identical to the pre-refactor inline code.  The golden values pinned
+   below were captured on the pre-refactor tree (same networks, same PRNG
+   keys) and must keep matching to <= 1e-12, including the distributed path,
+   and replaying a contraction after warm-up must tick zero planner-cache
+   misses (identical signatures).
+2. **Variational accuracy** — the ALS-fitted boundary is exact when chi
+   covers the exact bond dimension (matches ``contract_exact_onelayer`` /
+   dense contraction to 1e-8) and beats zip-up at truncating chi.
+3. **Dispatch** — engine/option errors are ``TypeError``/``ValueError`` that
+   name the registered alternatives (the PR 2 convention); the SPMD
+   wavefront rejects non-block engines at construction.
+
+The SPMD marshalling test (no device-0 staging in ``spmd.absorb_rows``)
+needs >= 2 devices and skips otherwise; ``make test-engines`` runs this
+file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bmps, peps, planner, spmd
+from repro.core.bmps import BMPS
+from repro.core.distributed import DistributedBMPS
+from repro.core.engines import (BoundaryEngine, get_engine,
+                                registered_engines)
+from repro.core.engines.variational import VariationalEngine
+from repro.core.engines.zipup import ZipUpEngine
+from repro.core.environments import top_environments
+
+
+def _rel(a, b):
+    a, b = complex(a), complex(b)
+    return abs(a - b) / max(abs(b), 1e-300)
+
+
+def _state(nrow, ncol, bond, seed, scale=2.0):
+    s = peps.random_peps(nrow, ncol, bond, jax.random.PRNGKey(seed))
+    return peps.PEPS([[t * scale for t in row] for row in s.sites])
+
+
+K17 = jax.random.PRNGKey(17)
+
+
+# ------------------------------------------------------------ registry ----
+
+def test_registry_and_resolution():
+    engines = registered_engines()
+    assert set(engines) >= {"zipup", "variational"}
+    assert isinstance(get_engine("zipup"), ZipUpEngine)
+    assert isinstance(get_engine("variational"), VariationalEngine)
+    assert get_engine("zipup").supports_blocks
+    assert not get_engine("variational").supports_blocks
+    # instances pass through (non-default hyper-parameters)
+    eng = VariationalEngine(sweeps=4)
+    assert get_engine(eng) is eng
+    assert isinstance(get_engine(eng), BoundaryEngine)
+
+
+def test_unknown_engine_typeerror_lists_registered():
+    with pytest.raises(TypeError, match=r"zipup.*variational|variational.*zipup"):
+        get_engine("zip-up")
+    with pytest.raises(TypeError, match="registered engines"):
+        get_engine(42)
+    # option construction fails fast, single-device and distributed
+    with pytest.raises(TypeError, match="registered engines"):
+        BMPS(8, engine="nope")
+    with pytest.raises(TypeError, match="registered engines"):
+        DistributedBMPS(8, engine="nope")
+
+
+def test_unknown_option_typeerror_lists_engines():
+    rows = peps.random_onelayer(2, 2, 2, jax.random.PRNGKey(0))
+    with pytest.raises(TypeError, match=r"BMPS.*zipup|zipup.*BMPS"):
+        bmps.contract_onelayer(rows, object())
+
+
+def test_spmd_wavefront_rejects_nonblock_engine():
+    for mode in ("spmd", "auto"):
+        with pytest.raises(ValueError, match="supports_blocks"):
+            DistributedBMPS(8, wavefront=mode, engine="variational")
+    # block engine + any wavefront is fine
+    DistributedBMPS(8, wavefront="spmd", engine="zipup")
+
+
+# ------------------------------------- refactor identity (golden values) ----
+#
+# Captured on the pre-refactor tree (zip-up inline in bmps.py), complex128.
+# The engine extraction must keep these bit-stable; the 1e-12 tolerance only
+# allows for BLAS-level nondeterminism.
+
+GOLDEN = {
+    "onelayer_direct": -0.00012873286629361584 - 5.3833319046630055e-05j,
+    "onelayer_rand": -0.00012873286629361724 - 5.383331904662955e-05j,
+    "norm33_direct": 0.15101467776759644 + 2.5153490401663703e-17j,
+    "norm44_rand": 0.0011335785265292415 - 4.772519825718621e-19j,
+    "inner33_rand": 0.0001706439255891352 + 0.002521652104873013j,
+    "amp44_rand": -5.77323121874269e-05 - 0.00010454796604215042j,
+    "norm44_dist": 0.0011335785265292415 - 4.772519825718621e-19j,
+}
+
+
+def test_zipup_golden_onelayer():
+    rows = peps.random_onelayer(4, 4, 3, jax.random.PRNGKey(42))
+    v = bmps.contract_onelayer(rows, BMPS(8), key=K17)
+    assert _rel(v, GOLDEN["onelayer_direct"]) <= 1e-12
+    v = bmps.contract_onelayer(rows, BMPS.randomized(8), key=K17)
+    assert _rel(v, GOLDEN["onelayer_rand"]) <= 1e-12
+
+
+def test_zipup_golden_twolayer():
+    s33 = peps.random_peps(3, 3, 2, jax.random.PRNGKey(7))
+    v = bmps.norm_squared(s33, BMPS(8), key=K17)
+    assert _rel(v, GOLDEN["norm33_direct"]) <= 1e-12
+    s44 = peps.random_peps(4, 4, 2, jax.random.PRNGKey(12))
+    v = bmps.norm_squared(s44, BMPS.randomized(10), key=K17)
+    assert _rel(v, GOLDEN["norm44_rand"]) <= 1e-12
+    ket = peps.random_peps(3, 3, 2, jax.random.PRNGKey(8))
+    v = bmps.inner(s33, ket, BMPS.randomized(10), key=K17)
+    assert _rel(v, GOLDEN["inner33_rand"]) <= 1e-12
+    bits = np.arange(16) % 2
+    v = bmps.amplitude(s44, bits, BMPS.randomized(10), key=K17)
+    assert _rel(v, GOLDEN["amp44_rand"]) <= 1e-12
+
+
+def test_zipup_golden_distributed():
+    s44 = peps.random_peps(4, 4, 2, jax.random.PRNGKey(12))
+    opt = DistributedBMPS.randomized(10, n_shards=2, block=1)
+    v = bmps.norm_squared(s44, opt, key=K17)
+    assert _rel(v, GOLDEN["norm44_dist"]) <= 1e-12
+
+
+def test_engine_layer_replay_ticks_nothing():
+    """Warm the planner through the re-exported pre-refactor entry points,
+    then contract through the engine layer: identical signatures mean the
+    replay adds zero path/fused misses."""
+    rows = peps.random_onelayer(4, 4, 2, jax.random.PRNGKey(5))
+    opt = BMPS.randomized(6, niter=2, oversample=4)
+    # pre-refactor call style: explicit row sweep via the re-exported names
+    keys = bmps._keys(K17, 4)
+    svec = [t.reshape(t.shape[1:]) for t in rows[0]]
+    for i in range(1, 4):
+        svec = bmps._zipup_row(svec, rows[i], opt.chi, opt.svd, keys[i])
+    warm = bmps._mps_to_scalar(svec)
+    before = planner.stats()
+    v = bmps.contract_onelayer(rows, opt, key=K17)
+    delta = planner.stats_since(before)
+    assert delta["path_misses"] == 0 and delta["fused_misses"] == 0
+    assert complex(v) == complex(warm)
+
+
+# ----------------------------------------------- variational accuracy ----
+
+def test_variational_exact_at_full_chi_onelayer():
+    # chi >= exact boundary bond => the fit reproduces the exact contraction
+    for (nrow, ncol, bond, chi, seed) in [(3, 3, 3, 27, 1), (4, 4, 2, 16, 2)]:
+        rows = peps.random_onelayer(nrow, ncol, bond, jax.random.PRNGKey(seed))
+        exact = bmps.contract_exact_onelayer(rows)
+        v = bmps.contract_onelayer(rows, BMPS(chi, engine="variational"),
+                                   key=jax.random.PRNGKey(3))
+        assert _rel(v, exact) <= 1e-8
+
+
+def test_variational_exact_at_full_chi_twolayer():
+    st = _state(3, 3, 2, seed=7, scale=1.0)
+    merged = bmps.merge_layers(st.sites, st.sites)
+    dense = complex(bmps.contract_exact_onelayer(merged)) * \
+        float(jnp.exp(2.0 * st.log_scale))
+    v = bmps.norm_squared(st, BMPS(40, engine="variational"), key=K17)
+    assert _rel(v, dense) <= 1e-8
+
+
+def test_variational_beats_zipup_at_truncating_chi():
+    rows = peps.random_onelayer(4, 4, 3, jax.random.PRNGKey(42))
+    exact = bmps.contract_exact_onelayer(rows)
+    key = K17
+    zip_err = _rel(bmps.contract_onelayer(rows, BMPS(8), key), exact)
+    var_err = _rel(bmps.contract_onelayer(
+        rows, BMPS(8, engine="variational"), key), exact)
+    assert var_err < zip_err
+
+
+def test_variational_cache_hit_rate():
+    st = _state(4, 4, 2, seed=9)
+    opt = BMPS.randomized(6, niter=2, oversample=4, engine="variational")
+    bmps.norm_squared(st, opt, key=K17)            # warm-up
+    before = planner.stats()
+    bmps.norm_squared(st, opt, key=K17)            # replay
+    delta = planner.stats_since(before)
+    assert delta["path_misses"] == 0 and delta["fused_misses"] == 0
+    hits = delta["path_hits"] + delta["fused_hits"]
+    assert hits > 50                               # > 99% hit rate
+
+
+def test_variational_engine_instance_option():
+    rows = peps.random_onelayer(3, 3, 2, jax.random.PRNGKey(4))
+    exact = bmps.contract_exact_onelayer(rows)
+    v = bmps.contract_onelayer(rows, BMPS(4, engine=VariationalEngine(sweeps=3)),
+                               key=K17)
+    assert _rel(v, exact) < 1.0                    # smoke: runs + sane
+
+
+def test_environments_respect_engine():
+    st = _state(3, 3, 2, seed=7, scale=1.0)
+    merged = bmps.merge_layers(st.sites, st.sites)
+    dense = complex(bmps.contract_exact_onelayer(merged))
+    envs = top_environments(st.sites, st.sites,
+                            BMPS(40, engine="variational"), key=K17)
+    assert len(envs) == st.nrow + 1
+    closed = bmps._twolayer_final_scalar(envs[st.nrow])
+    assert _rel(closed, dense) <= 1e-8
+
+
+# ----------------------------------------------- distributed dispatch ----
+
+def test_distributed_variational_matches_single_device():
+    st = _state(4, 4, 2, seed=3)
+    key = jax.random.PRNGKey(7)
+    single = bmps.norm_squared(st, BMPS(8, engine="variational"), key)
+    for n_shards, block in [(2, 1), (2, 2), (3, 1)]:
+        opt = DistributedBMPS(8, n_shards=n_shards, block=block,
+                              engine="variational")
+        v = bmps.norm_squared(st, opt, key)
+        assert _rel(v, single) <= 1e-10
+
+
+def test_distributed_variational_environments():
+    st = _state(3, 4, 2, seed=6)
+    key = jax.random.PRNGKey(11)
+    ref = top_environments(st.sites, st.sites,
+                           BMPS(8, engine="variational"), key)
+    envs = top_environments(st.sites, st.sites,
+                            DistributedBMPS(8, n_shards=2, block=1,
+                                            engine="variational"), key)
+    assert len(envs) == len(ref)
+    for lv_a, lv_b in zip(ref, envs):
+        for a, b in zip(lv_a, lv_b):
+            assert float(jnp.max(jnp.abs(a - b))) <= 1e-12
+
+
+# ------------------------------------------------- SPMD marshalling ----
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (make test-engines forces 8)")
+def test_spmd_entry_marshalling_no_dev0_staging(monkeypatch):
+    """ROADMAP PR 5 follow-up: ``spmd.absorb_rows`` must not build the
+    stacked superstep operands on device 0 and then redistribute — each
+    shard's chunk is committed straight to its owner and the global array is
+    assembled with ``make_array_from_single_device_arrays``.  Asserted by
+    recording every ``jax.device_put`` during a superstep-engaging sweep:
+    no call may use a Sharding target (the old redistribution), and the
+    single-device targets must cover every mesh device."""
+    st = _state(5, 8, 2, seed=3)
+    chi, key = 8, jax.random.PRNGKey(7)
+    opt = DistributedBMPS.randomized(chi, niter=2, oversample=4, n_shards=2,
+                                     wavefront="auto")
+    ref = bmps.norm_squared(st, BMPS.randomized(chi, niter=2, oversample=4),
+                            key)
+
+    calls = []
+    real_put = jax.device_put
+
+    def recording_put(x, device=None, **kw):
+        calls.append(device)
+        return real_put(x, device, **kw)
+
+    monkeypatch.setattr(jax, "device_put", recording_put)
+    before = dict(spmd.stats())
+    val = bmps.norm_squared(st, opt, key)
+    monkeypatch.undo()
+
+    assert spmd.stats()["superstep_calls"] > before["superstep_calls"], \
+        "sweep never engaged the SPMD superstep — marshalling not exercised"
+    shardings = [d for d in calls
+                 if d is not None and not isinstance(d, jax.Device)]
+    assert not shardings, \
+        f"absorb_rows staged+redistributed via Sharding targets: {shardings}"
+    targets = {d for d in calls if isinstance(d, jax.Device)}
+    assert len(targets) >= 2, "operands were not spread across devices"
+    assert _rel(val, ref) <= 1e-10
