@@ -42,6 +42,23 @@ test-engines:
 bench-engines:
 	PYTHONPATH=src $(PY) benchmarks/bench_engines.py
 
+# Kernel lane: property-based kernel-vs-dense parity + dispatch gating.
+.PHONY: test-kernels
+test-kernels:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_kernels.py \
+	    tests/test_dispatch.py
+
+# Per-precision error-budget tier: exact re-pins goldens, mixed is
+# measured against every budget documented in docs/contraction.md §6.
+.PHONY: test-precision
+test-precision:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_precision.py
+
+# Pallas kernel vs XLA + accuracy-per-FLOP of precision="mixed".
+.PHONY: bench-kernels
+bench-kernels:
+	PYTHONPATH=src $(PY) benchmarks/bench_kernels.py
+
 .PHONY: docs-check
 docs-check:
 	$(PY) tools/check_doc_links.py

@@ -1,0 +1,150 @@
+"""Pallas micro-kernel + mixed-precision benchmark (ISSUE 7 acceptance).
+
+Two measurements, one per tentpole half:
+
+* ``kernels/<site>/...`` — forced-Pallas kernel vs the XLA dense reference
+  on the tall-skinny GEMM shapes the rSVD chain produces, per dispatch
+  site (gram / tall_apply / the zip-up first-column einsum).  Off-TPU the
+  kernels run in **interpret mode**, so absolute kernel times are
+  mode-dependent and NOT comparable across machines — the pinned quantity
+  is the dense reference time plus the kernel-vs-dense ``rel_err`` in the
+  derived column (which must stay at f32-rounding scale on every
+  platform).  On a real TPU the same rows read out the compiled speedup.
+
+* ``kernels/mixed/...`` — the accuracy-per-FLOP delta of
+  ``precision="mixed"`` on the bench_engines grid: per (suite, chi) one
+  exact and one mixed row with wall time and the relative value error of
+  each against the suite's dense/statevector reference.  The mixed row's
+  extra error column (``vs_exact``) is the precision-policy error alone —
+  same chi, engine, and PRNG key as the exact row — and must sit inside
+  the documented budget table (docs/contraction.md §6).
+
+Run: ``PYTHONPATH=src python benchmarks/bench_kernels.py`` (or
+``make bench-kernels``).  Pinned: ``benchmarks/baselines/bench_kernels.json``.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SCALE, emit, emit_info, save_rows, timeit
+from repro.core import bmps as B
+from repro.core import peps as P
+from repro.core import statevector as sv
+from repro.core.circuits import (apply_circuit_exact_peps,
+                                 apply_circuit_statevector, random_circuit)
+from repro.core.ite import ite_run
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import QRUpdate
+from repro.kernels import dispatch
+from repro.kernels.gram import gram, gram_complex
+from repro.kernels.matvec import planar_matmul
+
+PRECISIONS = ("exact", "mixed")
+
+
+def _rel(a, b):
+    return abs(complex(a) - complex(b)) / abs(complex(b))
+
+
+# ---------------------------------------------------------------------------
+# Part 1: kernel vs XLA dense, per site
+# ---------------------------------------------------------------------------
+
+def bench_kernel_gemms():
+    mode = "interpret" if dispatch.interpret_default() else "compiled"
+    emit_info("kernels/mode", f"pallas={mode};backend={jax.default_backend()}")
+    m, k = (4096, 64) if SCALE == "small" else (65536, 256)
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    bmat = jax.random.normal(jax.random.PRNGKey(1), (k, k // 4), jnp.float32)
+    c = (a[: m // 2] + 1j * a[m // 2:]).astype(jnp.complex64)
+
+    cases = [
+        ("gram", lambda: gram(a), lambda: a.T @ a),
+        ("gram_complex", lambda: gram_complex(c), lambda: c.conj().T @ c),
+        ("tall_apply", lambda: planar_matmul(a, bmat), lambda: a @ bmat),
+    ]
+    for name, kfn, dfn in cases:
+        want = np.asarray(jax.block_until_ready(dfn()))
+        got = np.asarray(jax.block_until_ready(kfn()))
+        err = np.linalg.norm((got - want).ravel()) / np.linalg.norm(want.ravel())
+        t_dense = timeit(lambda f=dfn: f())
+        t_kernel = timeit(lambda f=kfn: f())
+        emit(f"kernels/{name}/dense", t_dense, f"shape={m}x{k}")
+        emit(f"kernels/{name}/pallas_{mode}", t_kernel,
+             f"rel_err={err:.3e}")
+        assert err < 1e-4, f"{name}: kernel disagrees with XLA ({err:.3e})"
+
+
+# ---------------------------------------------------------------------------
+# Part 2: accuracy-per-FLOP of precision="mixed" on the bench_engines grid
+# ---------------------------------------------------------------------------
+
+def _grid_rows(name, chis, contract_fn, reference):
+    """Per (chi, precision): wall time + rel_err vs the suite reference;
+    mixed rows add vs_exact (the precision error alone, identical solve)."""
+    for chi in chis:
+        vals = {}
+        for prec in PRECISIONS:
+            opt = B.BMPS(chi, precision=prec)
+            vals[prec] = complex(contract_fn(opt))
+            extra = ""
+            if prec == "mixed":
+                extra = f";vs_exact={_rel(vals['mixed'], vals['exact']):.3e}"
+            emit(f"{name}/chi{chi}/{prec}",
+                 timeit(lambda o=opt: contract_fn(o)),
+                 f"rel_err={_rel(vals[prec], reference):.3e}" + extra,
+                 precision=prec)
+
+
+def bench_mixed_tfi():
+    nrow = ncol = 4
+    obs = tfi_hamiltonian(nrow, ncol, jz=-1.0, hx=-3.5)
+    steps = 10 if SCALE == "small" else 30
+    run = ite_run(P.computational_zeros(nrow, ncol), obs, steps=steps,
+                  tau=0.05, update=QRUpdate(rank=3),
+                  contract=B.BMPS(16), measure_every=steps)
+    state = run.state
+    merged = B.merge_layers(state.sites, state.sites)
+    dense = complex(B.contract_exact_onelayer(merged)) * \
+        float(np.exp(2.0 * state.log_scale))
+    emit_info("kernels/mixed/tfi4x4", f"D=3;dense_norm={abs(dense):.6e}")
+    key = jax.random.PRNGKey(17)
+    _grid_rows("kernels/mixed/tfi4x4", (4, 8),
+               lambda opt: B.norm_squared(state, opt, key), dense)
+
+
+def bench_mixed_rqc():
+    n = 3
+    circ = random_circuit(n, n, 8, seed=3)
+    state = apply_circuit_exact_peps(P.computational_zeros(n, n), circ)
+    vec = apply_circuit_statevector(sv.zeros(n * n), circ)
+    bits = np.zeros((n, n), dtype=int)
+    exact = complex(vec[(0,) * (n * n)])
+    emit_info("kernels/mixed/rqc3x3",
+              f"bond={state.max_bond()};|amp|={abs(exact):.3e}")
+    key = jax.random.PRNGKey(17)
+    _grid_rows("kernels/mixed/rqc3x3", (4, 8),
+               lambda opt: B.amplitude(state, bits, opt, key), exact)
+
+
+def main():
+    prev = dispatch.set_kernel_backend("pallas")
+    try:
+        bench_kernel_gemms()
+    finally:
+        dispatch.set_kernel_backend(prev)
+    bench_mixed_tfi()
+    bench_mixed_rqc()
+
+
+if __name__ == "__main__":
+    main()
+    save_rows("bench_kernels.json")

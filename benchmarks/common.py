@@ -31,25 +31,33 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw) -> floa
     return times[len(times) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = "", engine: str = None):
+def emit(name: str, seconds: float, derived: str = "", engine: str = None,
+         precision: str = None):
     """Print the assignment-mandated CSV row: name,us_per_call,derived.
 
     ``engine`` tags the row with the boundary engine that produced it
     (``"zipup"`` / ``"variational"``); engine-dimensioned suites
-    (bench_engines) set it so baseline JSONs can be compared per engine."""
+    (bench_engines) set it so baseline JSONs can be compared per engine.
+    ``precision`` tags precision-dimensioned rows (``"exact"`` /
+    ``"mixed"``, bench_kernels) the same way."""
     us = seconds * 1e6
     print(f"{name},{us:.1f},{derived}")
     row = {"name": name, "us_per_call": us, "derived": derived}
     if engine is not None:
         row["engine"] = engine
+    if precision is not None:
+        row["precision"] = precision
     _ROWS.append(row)
 
 
-def emit_info(name: str, derived: str, engine: str = None):
+def emit_info(name: str, derived: str, engine: str = None,
+              precision: str = None):
     print(f"{name},,{derived}")
     row = {"name": name, "us_per_call": None, "derived": derived}
     if engine is not None:
         row["engine"] = engine
+    if precision is not None:
+        row["precision"] = precision
     _ROWS.append(row)
 
 

@@ -18,7 +18,7 @@ import traceback
 
 from benchmarks import (bench_caching, bench_contraction, bench_distributed,
                         bench_engines, bench_evolution, bench_ite,
-                        bench_roofline, bench_rqc, bench_vqe)
+                        bench_kernels, bench_roofline, bench_rqc, bench_vqe)
 from benchmarks.common import emit_info, save_rows
 
 SUITES = {
@@ -31,6 +31,7 @@ SUITES = {
     "roofline": bench_roofline,        # Fig. 11/12 analogue
     "distributed": bench_distributed,  # paper Section V (ISSUE 4)
     "engines": bench_engines,          # boundary-engine frontier (ISSUE 6)
+    "kernels": bench_kernels,          # Pallas kernels + mixed precision (ISSUE 7)
 }
 
 

@@ -98,14 +98,26 @@ class BMPS:
     (repro.core.planner) turns the per-site einsumsvd into a compiled-call
     replay across sites, rows, and sweeps.  The variational engine's local
     updates live in the same cache regime (``planner.fused_fn``).
+
+    ``precision`` selects the numerical policy (:mod:`repro.core.precision`):
+    ``"exact"`` (default — bit-identical to the pre-policy code) or
+    ``"mixed"`` (one-tier storage demotion around each einsumsvd solve,
+    bf16 multiplicands in the Pallas kernel sites, f32 accumulation).  The
+    ``svd`` option is wrapped at construction, so engines, the distributed
+    halo pipeline, the SPMD superstep, and the full update all inherit the
+    policy with no signature changes.
     """
     chi: int
     svd: object = DirectSVD()
     constrain_carry: object = None
     engine: object = "zipup"
+    precision: object = "exact"
 
     def __post_init__(self):
         get_engine(self.engine)  # fail fast on unknown engines
+        from repro.core.precision import resolve_precision, wrap_svd
+        policy = resolve_precision(self.precision)  # fail fast on bad names
+        object.__setattr__(self, "svd", wrap_svd(self.svd, policy))
 
     @classmethod
     def randomized(cls, chi: int, niter: int = 4, oversample: int = 8,

@@ -177,6 +177,11 @@ class DistributedBMPS:
     on the default device, sandwiched between the sharded layout, and the
     SPMD wavefront rejects them at construction (the superstep *is* the
     block contract compiled; see docs/contraction.md).
+
+    ``precision`` mirrors :class:`~repro.core.bmps.BMPS`: ``"exact"``
+    (default) or ``"mixed"`` — the svd option is wrapped at construction,
+    so the halo pipeline and the SPMD superstep inherit the policy
+    unchanged (mode choice and sharding never interact with it).
     """
     chi: int
     svd: object = DirectSVD()
@@ -185,6 +190,7 @@ class DistributedBMPS:
     devices: Tuple = ()
     wavefront: str = "host"
     engine: object = "zipup"
+    precision: object = "exact"
 
     def __post_init__(self):
         if self.wavefront not in ("host", "spmd", "auto"):
@@ -192,6 +198,9 @@ class DistributedBMPS:
                 f"wavefront must be 'host', 'spmd' or 'auto', "
                 f"got {self.wavefront!r}")
         eng = get_engine(self.engine)  # fail fast on unknown engines
+        from repro.core.precision import resolve_precision, wrap_svd
+        policy = resolve_precision(self.precision)
+        object.__setattr__(self, "svd", wrap_svd(self.svd, policy))
         if self.wavefront != "host" and not eng.supports_blocks:
             raise ValueError(
                 f"wavefront={self.wavefront!r} requires a block-capable "

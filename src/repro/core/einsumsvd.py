@@ -26,11 +26,25 @@ The hot path is plan-cached and fused, keyed by the **network signature**
   paths inside it are memoized by the planner's path cache, which also
   serves the unfused and :class:`DirectSVD` paths through
   ``ImplicitOperator``.
-* *Kernel dispatch rule* — the Gram matrices of the orthogonalization steps
-  route to the Pallas streaming-Gram kernel when the operand is tall-skinny
-  (``nbig >= 8 * nsmall``, small side <= 512), 32-bit, and a TPU backend is
-  active; otherwise the dense reshape-free contraction runs (see
-  ``orthogonalize.set_gram_backend``).
+* *Kernel dispatch rule* — the big-operand GEMMs of the solve (the Gram
+  matrices of the orthogonalization steps, the tall-apply reconstitutions/
+  projections of the rSVD chain, and the zip-up first-column/pair-merge
+  einsums of the engines) are registered as sites in
+  :mod:`repro.kernels.dispatch` and route to their Pallas kernels when the
+  operand is tall-skinny (``nbig >= 8 * nsmall``, small side <= 512),
+  32-bit, and a TPU backend is active; otherwise the exact dense
+  contraction runs.  ``set_kernel_backend`` forces either path (globally
+  or per site); f64/c128 operands stay dense unconditionally.  The full
+  dispatch state is folded into the planner's fused-cache keys.
+
+Precision (see :mod:`repro.core.precision`)
+-------------------------------------------
+``einsumsvd(..., precision="mixed")`` (or a wrapped option from
+``precision.wrap_svd``) demotes the operand tensors one storage tier
+around the solve (f64 -> f32, c128 -> c64), runs the Pallas kernel sites
+with bf16 multiplicands / f32 accumulation, and promotes the factors back.
+The default ``"exact"`` is the identity — bit-identical to the pre-policy
+code path.
 
 The same engines seed the full update's ALS bond optimization
 (:mod:`repro.core.full_update`): the reduced gate-applied network is split
@@ -113,6 +127,7 @@ def einsumsvd(
     rank: int,
     absorb: str = "both",
     key=None,
+    precision=None,
 ) -> Tuple[jnp.ndarray, ...]:
     """Contract the network and refactorize into (left, right) along a new bond.
 
@@ -124,10 +139,17 @@ def einsumsvd(
     rank:        truncation bond dimension (static).
     absorb:      'both' (sqrt(s) into each factor — simple update convention),
                  'left', 'right', or 'none' (returns (u, s, v)).
+    precision:   optional policy name/instance (``"exact"`` | ``"mixed"``)
+                 applied to the option for this call (see
+                 :mod:`repro.core.precision`).  ``None`` keeps whatever
+                 policy the option already carries.
 
     Returns (left, right) — or (u, s, v) when absorb='none'.  The new bond is
     the LAST axis of ``left`` and the FIRST axis of ``right``.
     """
+    if precision is not None:
+        from repro.core.precision import wrap_svd
+        option = wrap_svd(option, precision)
     op = ImplicitOperator(tensors, subscripts, row, col)
     u, s, v = option(op, rank, key)
     if absorb == "none":

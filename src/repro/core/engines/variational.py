@@ -263,12 +263,30 @@ class VariationalEngine(BoundaryEngine):
                     renvs[j] = rn
         return bs
 
+    def _fit_with_policy(self, sites, seed, svd):
+        """Run :meth:`_fit` under the precision policy the svd option
+        carries: with the mixed policy the site tensors and the zip-up seed
+        are demoted one storage tier for the ALS sweeps (the local solves
+        are where the FLOPs are) and the fitted boundary is promoted back,
+        mirroring :class:`repro.core.precision.PrecisionWrapped`.  The
+        exact policy is a no-op passthrough."""
+        from repro.core.precision import demote, policy_of
+        pol = policy_of(svd)
+        if not pol.demote:
+            return self._fit(sites, seed)
+        orig_dtype = seed[0].dtype
+        sites_d = [tuple(demote(t, pol) for t in site) for site in sites]
+        seed_d = [demote(t, pol) for t in seed]
+        out = self._fit(sites_d, seed_d)
+        return [t.astype(orig_dtype) for t in out]
+
     # -- BoundaryEngine interface -------------------------------------------
 
     def absorb_onelayer(self, svec, row, chi, svd, key):
         from repro.core.engines.zipup import _zipup_row
         seed = _zipup_row(svec, row, chi, svd, key)
-        return self._fit([(svec[j], row[j]) for j in range(len(svec))], seed)
+        return self._fit_with_policy(
+            [(svec[j], row[j]) for j in range(len(svec))], seed, svd)
 
     def absorb_twolayer(self, svec, bra_row, ket_row, chi, svd, key,
                         constrain_carry=None):
@@ -277,8 +295,9 @@ class VariationalEngine(BoundaryEngine):
         from repro.core.engines.zipup import _zipup_row_twolayer
         seed = _zipup_row_twolayer(svec, bra_row, ket_row, chi, svd, key,
                                    constrain_carry=constrain_carry)
-        return self._fit([(svec[j], bra_row[j], ket_row[j])
-                          for j in range(len(svec))], seed)
+        return self._fit_with_policy(
+            [(svec[j], bra_row[j], ket_row[j]) for j in range(len(svec))],
+            seed, svd)
 
     def final_scalar_onelayer(self, svec):
         from repro.core.engines.zipup import _mps_to_scalar

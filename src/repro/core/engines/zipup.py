@@ -26,6 +26,11 @@ import jax.numpy as jnp
 
 from repro.core.einsumsvd import einsumsvd
 from repro.core.engines import BoundaryEngine, register_engine
+from repro.kernels.zipup_block import (
+    first_column_onelayer,
+    first_column_twolayer,
+    pair_merge,
+)
 
 
 def _keys(key, n):
@@ -62,8 +67,10 @@ def zipup_block(v: Optional[jnp.ndarray], svec_block: Sequence[jnp.ndarray],
     j0 = 0
     if first:
         # V0: contract S_0 (b,f,g) with O_0 (f,c,h,k); left bonds b,c are dim 1.
+        # Kernel-dispatched (site "zipup_first_onelayer"); the dense path is
+        # verbatim the original einsum.
         s0, o0 = svec_block[0], row_block[0]
-        v = jnp.einsum("bfg,fchk->bchgk", s0, o0)
+        v = first_column_onelayer(s0, o0)
         b, c = v.shape[0], v.shape[1]
         v = v.reshape(b * c, v.shape[2], v.shape[3], v.shape[4])  # (a, e, b', c')
         j0 = 1
@@ -129,8 +136,8 @@ def zipup_block_twolayer(v: Optional[jnp.ndarray],
         tb0, tk0 = bra_block[0].conj(), ket_block[0]
         s0 = svec_block[0]
         # S_0:(b,f1,f2,g), bra:(p,f1,c1,h1,k1), ket:(p,f2,c2,h2,k2); b,c1,c2 dim 1
-        v = jnp.einsum("bfFg,pfchk,pFCHK->bcChHgkK", s0, tb0, tk0,
-                       optimize="optimal")
+        # Kernel-dispatched (site "zipup_first_twolayer").
+        v = first_column_twolayer(s0, tb0, tk0)
         sh = v.shape
         v = v.reshape(sh[0] * sh[1] * sh[2], sh[3], sh[4], sh[5], sh[6], sh[7])
         # v: (a, e1, e2, b, c1, c2)
@@ -171,7 +178,8 @@ def _init_twolayer_boundary(bra_row, ket_row) -> List[jnp.ndarray]:
     out = []
     for tb, tk in zip(bra_row, ket_row):
         # (p,1,l1,d1,r1)* x (p,1,l2,d2,r2) -> (l1 l2, d1, d2, r1 r2)
-        pair = jnp.einsum("puldr,pULDR->lLdDrR", tb.conj(), tk)
+        # Kernel-dispatched (site "pair_merge").
+        pair = pair_merge(tb.conj(), tk)
         s = pair.shape
         out.append(pair.reshape(s[0] * s[1], s[2], s[3], s[4] * s[5]))
     return out

@@ -15,8 +15,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as _dispatch
+
 _EPS = {jnp.float32.dtype: 1e-6, jnp.float64.dtype: 1e-13,
-        jnp.complex64.dtype: 1e-6, jnp.complex128.dtype: 1e-13}
+        jnp.complex64.dtype: 1e-6, jnp.complex128.dtype: 1e-13,
+        jnp.bfloat16.dtype: 1e-3}
 
 
 def _eps_for(dtype) -> float:
@@ -24,79 +27,122 @@ def _eps_for(dtype) -> float:
 
 
 # --------------------------------------------------------------------------
-# Gram backend dispatch (tall-skinny hot path -> Pallas kernel)
+# Kernel dispatch (tall-skinny hot paths -> Pallas kernels)
 # --------------------------------------------------------------------------
 #
-# The Gram matrix G = A^H A of Alg. 5 is the tall-skinny GEMM the Pallas
-# ``gram`` kernel (src/repro/kernels/gram.py) implements: G stays in VMEM
-# while A streams through in tiles.  Dispatch rule ("auto"):
-#   * f32/bf16/c64 only (the kernel accumulates in f32 — routing f64 there
-#     would silently halve precision), AND
-#   * tall and skinny: nbig >= _PALLAS_MIN_BIG, nsmall <= _PALLAS_MAX_SMALL,
-#     nbig >= 8 * nsmall, AND
-#   * a real TPU backend (on CPU the kernel runs in interpret mode, which is
-#     for correctness testing, not speed).
-# "pallas" forces the kernel (interpret mode off-TPU; still dtype-gated);
-# "dense" forces the jnp contraction.  See tests/test_planner.py.
-
-_GRAM_BACKEND = {"mode": "auto"}
-_PALLAS_MIN_BIG = 4096
-_PALLAS_MAX_SMALL = 512
-_DISPATCH_COUNTERS = {"pallas_gram_calls": 0, "dense_gram_calls": 0}
-
-# dtypes the f32-accumulating kernel serves at full (or better) precision
-_KERNEL_DTYPES = (jnp.float32.dtype, jnp.bfloat16.dtype, jnp.complex64.dtype)
+# Two dispatch sites (registered in repro.kernels.dispatch, which owns the
+# shared gate: f32/bf16/c64 only — the kernels accumulate in f32, so
+# routing f64 there would silently halve precision — and, in auto mode,
+# tall-skinny shapes on a real TPU backend; CPU CI stays dense/exact):
+#
+#   * "gram"       — G = A^H A of Alg. 5: the streaming-Gram kernel
+#     (src/repro/kernels/gram.py), G resident in VMEM while A streams.
+#   * "tall_apply" — the reconstitution Q = A P (and the final rSVD
+#     projections in core/rsvd.py): the streaming tall-apply kernel
+#     (src/repro/kernels/matvec.py), small matrix resident, A streams.
+#
+# Together the two sites cover every big-operand GEMM of one rSVD power
+# iteration.  set_gram_backend/gram_backend/gram_dispatch_stats are the
+# PR 1 names, kept as thin aliases of the registry-wide controls; see
+# tests/test_planner.py + tests/test_dispatch.py.
 
 
 def set_gram_backend(mode: str) -> str:
-    """Select the Gram backend: 'auto' (shape/dtype/backend-gated Pallas),
-    'pallas' (force the kernel), or 'dense'.  Returns the previous mode."""
+    """Select the kernel backend mode: 'auto' (shape/dtype/backend-gated
+    Pallas), 'pallas' (force kernels), or 'dense'.  Returns the previous
+    mode.  Alias of ``repro.kernels.dispatch.set_kernel_backend`` (global
+    mode), kept for the PR 1 API."""
     if mode not in ("auto", "pallas", "dense"):
         raise ValueError(f"bad gram backend {mode!r}")
-    prev = _GRAM_BACKEND["mode"]
-    _GRAM_BACKEND["mode"] = mode
-    return prev
+    return _dispatch.set_kernel_backend(mode)
 
 
 def gram_backend() -> str:
-    """The currently-selected Gram backend mode ('auto'|'pallas'|'dense')."""
-    return _GRAM_BACKEND["mode"]
+    """The currently-selected global kernel backend mode."""
+    return _dispatch.kernel_backend()
 
 
 def gram_dispatch_stats() -> dict:
-    return dict(_DISPATCH_COUNTERS)
+    """Per-site pallas/dense call counters (all sites, not just gram)."""
+    return _dispatch.dispatch_stats()
 
 
 def reset_gram_dispatch_stats() -> None:
-    for k in _DISPATCH_COUNTERS:
-        _DISPATCH_COUNTERS[k] = 0
+    _dispatch.reset_dispatch_stats()
 
 
-def _pallas_eligible(dtype, nbig: int, nsmall: int) -> bool:
-    if jnp.dtype(dtype) not in _KERNEL_DTYPES:
-        return False
-    mode = _GRAM_BACKEND["mode"]
-    if mode == "pallas":
-        return True
-    return (nbig >= _PALLAS_MIN_BIG and nsmall <= _PALLAS_MAX_SMALL
-            and nbig >= 8 * nsmall and jax.default_backend() == "tpu")
+def _gram_dense(a: jnp.ndarray, big_axes, nbig: int, nsmall: int):
+    g = jnp.tensordot(a.conj(), a, axes=(big_axes, big_axes))
+    return g.reshape(nsmall, nsmall)
+
+
+def _gram_pallas(a: jnp.ndarray, big_axes, nbig: int, nsmall: int):
+    from repro.kernels.gram import gram, gram_complex
+    mat = a.reshape(nbig, nsmall)
+    compute = _dispatch.kernel_compute()
+    if jnp.issubdtype(a.dtype, jnp.complexfloating):
+        return gram_complex(mat, compute=compute)
+    return gram(mat, compute=compute)
+
+
+_dispatch.register_kernel(
+    "gram", pallas=_gram_pallas, dense=_gram_dense,
+    supported=lambda a, big_axes, nbig, nsmall:
+        _dispatch.dtype_supported(a.dtype),
+    auto=lambda a, big_axes, nbig, nsmall:
+        _dispatch.tall_skinny_auto(nbig, nsmall))
 
 
 def _gram_matrix(a: jnp.ndarray, big_axes: Tuple[int, ...],
                  nbig: int, nsmall: int) -> jnp.ndarray:
     """G = A^H A as an (nsmall, nsmall) matrix, Pallas-dispatched."""
-    if _GRAM_BACKEND["mode"] != "dense" and _pallas_eligible(a.dtype, nbig,
-                                                             nsmall):
-        from repro.kernels.gram import gram, gram_complex
-        _DISPATCH_COUNTERS["pallas_gram_calls"] += 1
-        mat = a.reshape(nbig, nsmall)
-        interpret = jax.default_backend() != "tpu"
-        if jnp.issubdtype(a.dtype, jnp.complexfloating):
-            return gram_complex(mat, interpret=interpret)
-        return gram(mat, interpret=interpret)
-    _DISPATCH_COUNTERS["dense_gram_calls"] += 1
-    g = jnp.tensordot(a.conj(), a, axes=(big_axes, big_axes))
-    return g.reshape(nsmall, nsmall)
+    return _dispatch.dispatch("gram", a, big_axes, nbig, nsmall)
+
+
+def _tall_project_dense(a: jnp.ndarray, mat: jnp.ndarray, n_small: int):
+    small_shape = a.shape[a.ndim - n_small:]
+    small_axes = tuple(range(a.ndim - n_small, a.ndim))
+    p = mat.reshape(small_shape + (mat.shape[1],))
+    return jnp.tensordot(a, p, axes=(small_axes, tuple(range(n_small))))
+
+
+def _tall_project_pallas(a: jnp.ndarray, mat: jnp.ndarray, n_small: int):
+    from repro.kernels.matvec import planar_matmul
+    big_shape = a.shape[: a.ndim - n_small]
+    nbig = 1
+    for s in big_shape:
+        nbig *= s
+    out = planar_matmul(a.reshape(nbig, mat.shape[0]), mat,
+                        compute=_dispatch.kernel_compute())
+    return out.reshape(big_shape + (mat.shape[1],))
+
+
+def _tall_project_nbig(a: jnp.ndarray, n_small: int) -> int:
+    nbig = 1
+    for s in a.shape[: a.ndim - n_small]:
+        nbig *= s
+    return nbig
+
+
+_dispatch.register_kernel(
+    "tall_apply", pallas=_tall_project_pallas, dense=_tall_project_dense,
+    supported=lambda a, mat, n_small:
+        _dispatch.dtype_supported(a.dtype, mat.dtype),
+    auto=lambda a, mat, n_small:
+        _dispatch.tall_skinny_auto(_tall_project_nbig(a, n_small),
+                                   max(mat.shape)))
+
+
+def tall_project(a: jnp.ndarray, mat: jnp.ndarray,
+                 n_small: int) -> jnp.ndarray:
+    """Contract ``a``'s trailing ``n_small`` axes with the 2D matrix ``mat``.
+
+    ``mat`` is ``(nsmall, q)`` with ``nsmall`` the product of the trailing
+    axes; the result has shape ``big_shape + (q,)``.  This is the streaming
+    "apply a small matrix to a tall operand" step of the rSVD chain —
+    Pallas-dispatched (site ``"tall_apply"``); the dense path is the exact
+    pre-kernel ``tensordot``."""
+    return _dispatch.dispatch("tall_apply", a, mat, n_small)
 
 
 def gram_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -133,10 +179,10 @@ def gram_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     sqrt_lam = jnp.sqrt(lam)
     r_mat = (sqrt_lam[:, None] * x.conj().T)           # R = sqrt(L) X^H
     p_mat = x / sqrt_lam[None, :]                      # P = R^{-1} = X L^{-1/2}
-    p = p_mat.reshape(small_shape + small_shape)
-    # Q = A P (contraction over the small modes — big modes untouched).
-    small_axes = tuple(range(a.ndim - n_small, a.ndim))
-    q = jnp.tensordot(a, p, axes=(small_axes, tuple(range(n_small))))
+    # Q = A P (contraction over the small modes — big modes untouched;
+    # Pallas-dispatched via the "tall_apply" site, dense path identical to
+    # the pre-kernel tensordot).
+    q = tall_project(a, p_mat, n_small).reshape(a.shape)
     r = r_mat.reshape(small_shape + small_shape)
     return q, r
 

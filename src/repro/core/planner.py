@@ -278,8 +278,8 @@ def fused_randomized_svd(op, rank: int, n_iter: int = 4, oversample: int = 8,
     reused by every einsumsvd call with the same structure.  Numerically
     identical to :func:`repro.core.rsvd.randomized_svd` (same ops, traced).
     """
-    from repro.core import orthogonalize as _orth
     from repro.core.rsvd import randomized_svd
+    from repro.kernels import dispatch as _dispatch
     if key is None:
         key = jax.random.PRNGKey(0)
     if not _CONFIG["fusion"]:
@@ -289,12 +289,14 @@ def fused_randomized_svd(op, rank: int, n_iter: int = 4, oversample: int = 8,
                             [t.shape for t in op.tensors],
                             [t.dtype for t in op.tensors],
                             op.row, op.col)
-    # The Gram backend choice is a trace-time decision baked into the
-    # compiled executable, so it (and the device backend) must be part of
-    # the key — otherwise set_gram_backend() would be silently ignored for
-    # already-compiled signatures.
+    # Kernel-dispatch state (backend mode, per-site overrides, compute
+    # dtype, interpret mode) is a trace-time decision baked into the
+    # compiled executable, so its full signature (and the device backend)
+    # must be part of the key — otherwise set_kernel_backend() /
+    # set_kernel_compute() would be silently ignored for already-compiled
+    # signatures.
     sig = sig + (rank, n_iter, oversample, gram_final,
-                 _orth.gram_backend(), jax.default_backend())
+                 _dispatch.backend_signature(), jax.default_backend())
     fn = _FUSED_CACHE.get(sig)
     if fn is None:
         _COUNTERS["fused_misses"] += 1

@@ -1,0 +1,249 @@
+"""Precision policy: the per-precision error budget replacing "always 1e-16".
+
+Until this module, every contraction in the library implicitly promised
+full-precision agreement with its dense reference (the pinned goldens of
+``tests/test_engines.py`` assert <= 1e-12).  Mixed-precision compute — the
+standard accelerator trade (bf16 multiplicands, f32 accumulation; one-tier
+storage demotion) — breaks that blanket promise, so it only ships together
+with a *documented, tested* budget per workload:
+
+* ``precision="exact"`` (default, and what CPU CI runs) — the identity
+  policy.  Bit-identical to the pre-policy code: the svd option is passed
+  through unwrapped, kernels multiply in the operand dtype.
+* ``precision="mixed"`` — around every einsumsvd refactorization the
+  operand tensors are demoted one storage tier (f64 -> f32, c128 -> c64;
+  f32/bf16/c64 are fixed points), the solve runs in the demoted dtype, and
+  the factors are promoted back so downstream shapes/dtypes are unchanged.
+  While the solve runs, the Pallas kernel sites multiply in bf16
+  (:func:`repro.kernels.dispatch.set_kernel_compute`) with f32
+  accumulation — on TPU that is the MXU's native fast path.  There is no
+  bf16 *emulation* on the dense path: off-kernel math runs in the demoted
+  storage dtype, so CPU validation measures the storage-demotion error and
+  TPU adds the (bounded, kernel-local) bf16 multiplicand error.
+
+The budgets live in :data:`ERROR_BUDGETS` — the single source of truth.
+``docs/contraction.md`` renders the same table
+(:func:`budget_table_markdown`) and ``tests/test_precision.py`` parses the
+doc back and asserts equality, so docs and tests cannot drift; the same
+tests then *measure* each workload against its budget.
+
+Threading: ``BMPS(..., precision=...)`` / ``DistributedBMPS`` wrap their
+``svd`` option in :class:`PrecisionWrapped` at construction, so every code
+path that forwards ``option.svd`` (engines, distributed halo pipeline, the
+SPMD superstep, cached environments, the full update's einsumsvd seed)
+inherits the policy with no signature changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """How much numerical precision a contraction is allowed to give up.
+
+    ``demote`` — demote operand storage one tier around each einsumsvd
+    solve (f64 -> f32, c128 -> c64); results are promoted back.
+    ``kernel_compute`` — multiplicand dtype inside Pallas kernel sites
+    while a solve under this policy runs (accumulation is always f32);
+    ``None`` keeps the operand dtype.
+    """
+    name: str
+    demote: bool = False
+    kernel_compute: Optional[str] = None
+
+    def __str__(self):
+        return self.name
+
+
+EXACT = PrecisionPolicy("exact")
+MIXED = PrecisionPolicy("mixed", demote=True, kernel_compute="bfloat16")
+
+_POLICIES = {"exact": EXACT, "mixed": MIXED}
+
+
+def resolve_precision(precision) -> PrecisionPolicy:
+    """Accept a policy name or instance; TypeError names the choices."""
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    if isinstance(precision, str) and precision in _POLICIES:
+        return _POLICIES[precision]
+    raise TypeError(
+        f"unknown precision {precision!r}: expected one of "
+        f"{sorted(_POLICIES)} or a PrecisionPolicy instance")
+
+
+# ---------------------------------------------------------------------------
+# Dtype demotion/promotion
+# ---------------------------------------------------------------------------
+
+_DEMOTE = {
+    jnp.float64.dtype: jnp.float32.dtype,
+    jnp.complex128.dtype: jnp.complex64.dtype,
+}
+
+
+def demote_dtype(dtype, policy: PrecisionPolicy):
+    if not policy.demote:
+        return jnp.dtype(dtype)
+    return _DEMOTE.get(jnp.dtype(dtype), jnp.dtype(dtype))
+
+
+def demote(x: jnp.ndarray, policy: PrecisionPolicy) -> jnp.ndarray:
+    target = demote_dtype(x.dtype, policy)
+    return x if x.dtype == target else x.astype(target)
+
+
+def real_dtype(dtype):
+    """The real scalar dtype matching ``dtype`` (c128 -> f64, c64 -> f32)."""
+    return jnp.zeros((), dtype).real.dtype
+
+
+# ---------------------------------------------------------------------------
+# The svd-option wrapper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionWrapped:
+    """An einsumsvd option wrapped with a precision policy.
+
+    Callable with the option protocol ``(op, rank, key) -> (u, s, v)``:
+    demotes the implicit operator's tensors per the policy, points the
+    kernel sites at the policy's compute dtype for the duration of the
+    solve (restored in ``finally``; the dispatch signature keys the
+    planner's fused cache, so exact and mixed solves never share a
+    compiled executable), and promotes the factors back to the original
+    operand dtype.  The exact policy never constructs this wrapper —
+    :func:`wrap_svd` returns the inner option untouched."""
+    inner: object
+    policy: PrecisionPolicy
+
+    def __call__(self, op, rank: int, key=None):
+        from repro.core.rsvd import ImplicitOperator
+        from repro.kernels import dispatch
+        pol = self.policy
+        orig_dtype = jnp.result_type(*[t.dtype for t in op.tensors])
+        tensors = list(op.tensors)
+        scale = None
+        if pol.demote:
+            # Per-solve operand scaling: normalize every tensor to unit
+            # max-abs BEFORE demotion and fold the product of scales back
+            # into s.  Without this, unnormalized networks (zip-up carries
+            # drift multiplicatively) push the demoted spectrum under the
+            # f32 Gram-QR eigenvalue clamp and the solve collapses to zero
+            # — scaling is what makes the mixed policy magnitude-safe.
+            scales = []
+            for t in tensors:
+                c = jnp.max(jnp.abs(t))
+                scales.append(jnp.where(jnp.isfinite(c) & (c > 0), c, 1.0))
+            tensors = [t / c for t, c in zip(tensors, scales)]
+            scale = scales[0]
+            for c in scales[1:]:
+                scale = scale * c
+        tensors = [demote(t, pol) for t in tensors]
+        changed = any(t.dtype != o.dtype for t, o in zip(tensors, op.tensors))
+        if changed or scale is not None:
+            op = ImplicitOperator(tensors, list(op.subscripts), op.row, op.col)
+        prev = dispatch.set_kernel_compute(pol.kernel_compute)
+        try:
+            u, s, v = self.inner(op, rank, key)
+        finally:
+            dispatch.set_kernel_compute(prev)
+        if changed:
+            u = u.astype(orig_dtype)
+            v = v.astype(orig_dtype)
+            s = s.astype(real_dtype(orig_dtype))
+        if scale is not None:
+            s = s * scale.astype(s.dtype)
+        return u, s, v
+
+
+def wrap_svd(svd, precision) -> object:
+    """Apply a precision policy to an einsumsvd option.
+
+    Idempotent and re-entrant: an already-wrapped option is unwrapped
+    first, so ``dataclasses.replace(opt, precision=...)`` flips cleanly in
+    both directions.  The exact policy returns the bare option (bit-
+    identical construction: ``BMPS(chi)`` before and after this PR build
+    equal options)."""
+    policy = resolve_precision(precision)
+    if isinstance(svd, PrecisionWrapped):
+        svd = svd.inner
+    if not policy.demote and policy.kernel_compute is None:
+        return svd    # identity policy: no wrapper, bit-identical options
+    return PrecisionWrapped(svd, policy)
+
+
+def policy_of(svd) -> PrecisionPolicy:
+    """The policy an (optionally wrapped) svd option carries."""
+    if isinstance(svd, PrecisionWrapped):
+        return svd.policy
+    return EXACT
+
+
+# ---------------------------------------------------------------------------
+# The error-budget table (single source of truth; docs render it, tests
+# parse the doc back and assert equality, then measure each workload)
+# ---------------------------------------------------------------------------
+
+#: Per-(workload, precision) relative-error budgets.  ``exact`` budgets are
+#: measured against the pinned goldens / dense references (the pre-existing
+#: 1e-12 contract); ``mixed`` budgets are measured against the *exact-path
+#: result of the identical contraction* (same chi, engine, PRNG key), so
+#: they isolate the precision policy from the truncation error.  Values
+#: were measured on the acceptance cases (see each entry's ``case``) and
+#: padded ~10x for cross-platform headroom.
+ERROR_BUDGETS: Dict[str, Dict[str, object]] = {
+    "contract_onelayer": {
+        "case": "4x4 random one-layer D=3 grid, chi=8 zip-up",
+        "exact": 1e-12,
+        "mixed": 1e-4,
+    },
+    "contract_twolayer": {
+        "case": "4x4 TFI D=3 ITE state, norm via chi=8 two-layer zip-up",
+        "exact": 1e-12,
+        "mixed": 1e-5,
+    },
+    "amplitude": {
+        "case": "3x3 RQC (8 layers), one amplitude vs exact statevector",
+        "exact": 1e-12,
+        "mixed": 2e-5,
+    },
+    "full_update_ite_step": {
+        "case": "one full-update ITE step on the 4x4 TFI D=3 state (energy)",
+        "exact": 1e-12,
+        "mixed": 5e-6,
+    },
+    "kernel_bf16_gemm": {
+        "case": "forced-Pallas bf16-multiplicand gram/tall-apply vs f32 dense",
+        "exact": 1e-12,
+        "mixed": 2e-2,
+    },
+}
+
+
+def error_budget(workload: str, precision) -> float:
+    """The documented budget for ``workload`` under ``precision``."""
+    policy = resolve_precision(precision)
+    try:
+        return float(ERROR_BUDGETS[workload][policy.name])
+    except KeyError:
+        raise KeyError(
+            f"no budget for workload {workload!r} / precision "
+            f"{policy.name!r}: known workloads {sorted(ERROR_BUDGETS)}")
+
+
+def budget_table_markdown() -> str:
+    """The budget table as GitHub markdown — docs/contraction.md embeds
+    exactly this rendering; tests/test_precision.py parses it back."""
+    lines = [
+        "| workload | acceptance case | exact | mixed |",
+        "|---|---|---|---|",
+    ]
+    for name, row in ERROR_BUDGETS.items():
+        lines.append(f"| `{name}` | {row['case']} | {row['exact']:.0e} "
+                     f"| {row['mixed']:.0e} |")
+    return "\n".join(lines)

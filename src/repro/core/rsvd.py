@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import planner
-from repro.core.orthogonalize import orthogonalize_cols
+from repro.core.orthogonalize import orthogonalize_cols, tall_project
 
 _ALL_LABELS = string.ascii_letters
 
@@ -154,15 +154,16 @@ def randomized_svd(
         # A ~= P T^H = P (q_t r_t)^H = P r_t^H q_t^H
         u_small, s, vh_small = jnp.linalg.svd(r_t.conj().T)   # k x k, local
         u_small, s, vh_small = u_small[:, :rank], s[:rank], vh_small[:rank]
-        u = jnp.tensordot(p, u_small, axes=[[p.ndim - 1], [0]])
+        # Final projections: tall operand x small matrix — the tall-apply
+        # kernel site (dense path is the exact pre-kernel tensordot).
+        u = tall_project(p, u_small, 1)              # row_shape+(rank,)
         # v = (q_t @ vh_small^H)^H: rank x col
-        v = jnp.tensordot(q_t.conj(), vh_small.T,
-                          axes=[[q_t.ndim - 1], [0]])          # col+(rank,)
+        v = tall_project(q_t.conj(), vh_small.T, 1)  # col_shape+(rank,)
         v = jnp.moveaxis(v, -1, 0)
         return u, s, v
     b = t.conj().reshape(op.col_size, k).T           # (k, ncol)
     u_small, s, vh = jnp.linalg.svd(b, full_matrices=False)
     u_small, s, vh = u_small[:, :rank], s[:rank], vh[:rank]
-    u = jnp.tensordot(p, u_small, axes=[[p.ndim - 1], [0]])  # row_shape+(rank,)
+    u = tall_project(p, u_small, 1)                  # row_shape+(rank,)
     v = vh.reshape((rank,) + op.col_shape)
     return u, s, v

@@ -1,0 +1,235 @@
+"""Kernel-dispatch registry: one gate for every Pallas micro-kernel site.
+
+PR 1 introduced a single hard-wired gate for the Gram kernel inside
+``core/orthogonalize.py``; this module generalizes it so every fused
+micro-kernel — the streaming Gram, the tall-apply projections of the rSVD
+chain, the zip-up first-column/pair-merge einsums — shares one decision
+procedure, one set of hit/miss counters, and one trace-time signature that
+the planner folds into its fused-cache keys.
+
+Model
+-----
+A **site** is a named operation with two interchangeable implementations:
+
+* ``dense``  — the reference ``jnp`` contraction (bit-identical to the
+  pre-kernel code paths; the goldens are pinned against it);
+* ``pallas`` — the tiled kernel (f32 accumulation, optional bf16
+  multiplicands; interpret mode off-TPU).
+
+Per call, :func:`dispatch` picks an implementation:
+
+1. the site's **supported** predicate is a *hard* gate — dtypes the
+   f32-accumulating kernels cannot serve at full precision (f64/c128)
+   never route to Pallas, even when forced;
+2. the mode — per-site override, else the global mode — decides the rest:
+   ``"dense"`` forces dense, ``"pallas"`` forces the kernel, ``"auto"``
+   additionally consults the site's **auto** shape/backend predicate
+   (typically: tall-skinny operand AND a real TPU backend, so CPU CI
+   stays on the exact dense path).
+
+Every decision ticks ``pallas_<site>_calls`` / ``dense_<site>_calls``
+(surfaced through ``planner.stats()``).  Counters tick at Python dispatch
+time: inside a jit-fused solver they tick once per trace, not per replay —
+the same contract as the planner counters.
+
+Trace-time state
+----------------
+:func:`backend_signature` captures everything here that changes a traced
+computation — global + per-site modes, the interpret override, and the
+kernel compute dtype (:func:`set_kernel_compute`, set by the mixed
+:class:`~repro.core.precision.PrecisionPolicy` around each solve).  The
+planner appends it to every fused-cache key; forgetting it would silently
+replay stale executables after a ``set_kernel_backend`` flip.
+
+Interpret mode
+--------------
+Pallas-TPU kernels compile only on TPU; elsewhere they run in interpret
+mode (functionally exact, slow — for correctness testing).
+:func:`interpret_default` autodetects (compiled on TPU, interpret
+otherwise) with two overrides: :func:`set_interpret_mode` (a process flag,
+highest precedence) and the ``REPRO_PALLAS_INTERPRET`` environment
+variable (``1``/``interpret`` or ``0``/``compiled``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+_MODES = ("auto", "pallas", "dense")
+
+# dtypes the f32-accumulating kernels serve at full (or better) precision.
+# f64/c128 are excluded unconditionally: routing them through an f32
+# accumulator would silently halve precision (see tests/test_dispatch.py).
+KERNEL_DTYPES = (jnp.float32.dtype, jnp.bfloat16.dtype, jnp.complex64.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSite:
+    """One dispatchable operation (see module docstring)."""
+    name: str
+    pallas_fn: Callable
+    dense_fn: Callable
+    supported: Callable[..., bool]   # hard gate (dtype) — applies always
+    auto: Callable[..., bool]        # soft gate (shape/backend) — auto mode
+
+
+_SITES: Dict[str, KernelSite] = {}
+_COUNTERS: Dict[str, int] = {}
+_STATE = {
+    "mode": "auto",                # global mode
+    "interpret": "autodetect",     # "autodetect" | "interpret" | "compiled"
+    "compute": None,               # kernel multiplicand dtype name (e.g.
+}                                  # "bfloat16") or None for operand dtype
+_SITE_MODES: Dict[str, str] = {}   # per-site overrides
+
+
+def register_kernel(name: str, *, pallas: Callable, dense: Callable,
+                    supported: Callable[..., bool] = None,
+                    auto: Callable[..., bool] = None) -> KernelSite:
+    """Register (or replace) a dispatch site.  Idempotent per name."""
+    site = KernelSite(name, pallas, dense,
+                      supported if supported is not None else lambda *a, **k: True,
+                      auto if auto is not None else lambda *a, **k: False)
+    _SITES[name] = site
+    _COUNTERS.setdefault(f"pallas_{name}_calls", 0)
+    _COUNTERS.setdefault(f"dense_{name}_calls", 0)
+    return site
+
+
+def registered_sites() -> tuple:
+    return tuple(sorted(_SITES))
+
+
+def dispatch(name: str, *args, **kwargs):
+    """Run site ``name`` on ``args``, Pallas- or dense-routed (see module
+    docstring for the decision procedure).  Unknown sites raise KeyError."""
+    site = _SITES[name]
+    mode = _SITE_MODES.get(name, _STATE["mode"])
+    use_pallas = False
+    if mode != "dense" and site.supported(*args, **kwargs):
+        use_pallas = mode == "pallas" or site.auto(*args, **kwargs)
+    if use_pallas:
+        _COUNTERS[f"pallas_{name}_calls"] += 1
+        return site.pallas_fn(*args, **kwargs)
+    _COUNTERS[f"dense_{name}_calls"] += 1
+    return site.dense_fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Mode / compute / interpret state
+# ---------------------------------------------------------------------------
+
+def set_kernel_backend(mode: str, site: Optional[str] = None) -> str:
+    """Select ``'auto'`` | ``'pallas'`` | ``'dense'``, globally or for one
+    ``site``.  Returns the previous value (for restore-in-finally)."""
+    if mode not in _MODES:
+        raise ValueError(f"bad kernel backend {mode!r}: expected one of {_MODES}")
+    if site is not None:
+        if site not in _SITES:
+            raise KeyError(f"unknown kernel site {site!r}: "
+                           f"registered: {registered_sites()}")
+        prev = _SITE_MODES.get(site, _STATE["mode"])
+        _SITE_MODES[site] = mode
+        return prev
+    prev = _STATE["mode"]
+    _STATE["mode"] = mode
+    _SITE_MODES.clear()    # a global set supersedes per-site overrides
+    return prev
+
+
+def kernel_backend(site: Optional[str] = None) -> str:
+    """Effective mode, global or for one site."""
+    if site is not None:
+        return _SITE_MODES.get(site, _STATE["mode"])
+    return _STATE["mode"]
+
+
+def set_kernel_compute(dtype) -> Optional[str]:
+    """Set the kernel multiplicand dtype (``'bfloat16'`` for the mixed
+    precision policy, ``None`` for operand dtype).  Accumulation is always
+    f32.  Returns the previous value."""
+    prev = _STATE["compute"]
+    _STATE["compute"] = None if dtype is None else jnp.dtype(dtype).name
+    return prev
+
+
+def kernel_compute() -> Optional[str]:
+    return _STATE["compute"]
+
+
+def set_interpret_mode(mode: str) -> str:
+    """Force Pallas interpret mode: ``'interpret'``, ``'compiled'``, or
+    ``'autodetect'`` (compiled on TPU, interpret elsewhere).  Highest
+    precedence; overrides ``REPRO_PALLAS_INTERPRET``.  Returns previous."""
+    if mode not in ("autodetect", "interpret", "compiled"):
+        raise ValueError(f"bad interpret mode {mode!r}")
+    prev = _STATE["interpret"]
+    _STATE["interpret"] = mode
+    return prev
+
+
+def interpret_default() -> bool:
+    """Whether Pallas kernels should run in interpret mode right now.
+
+    Precedence: :func:`set_interpret_mode` flag > ``REPRO_PALLAS_INTERPRET``
+    env var (``1``/``true``/``interpret`` vs ``0``/``false``/``compiled``) >
+    backend autodetect (compiled iff ``jax.default_backend() == "tpu"``)."""
+    mode = _STATE["interpret"]
+    if mode == "interpret":
+        return True
+    if mode == "compiled":
+        return False
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "interpret"):
+        return True
+    if env in ("0", "false", "compiled"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def backend_signature() -> tuple:
+    """Every piece of dispatch state that changes a *traced* computation.
+
+    Appended by the planner to fused-cache keys so flipping any of it
+    (mode, per-site overrides, compute dtype, interpret mode) never
+    silently replays a stale executable."""
+    return (_STATE["mode"],
+            tuple(sorted(_SITE_MODES.items())),
+            _STATE["compute"],
+            interpret_default())
+
+
+# ---------------------------------------------------------------------------
+# Counters
+# ---------------------------------------------------------------------------
+
+def dispatch_stats() -> Dict[str, int]:
+    return dict(_COUNTERS)
+
+
+def reset_dispatch_stats() -> None:
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# Shared auto-gate helpers (the tall-skinny criterion of PR 1's gram gate)
+# ---------------------------------------------------------------------------
+
+PALLAS_MIN_BIG = 4096
+PALLAS_MAX_SMALL = 512
+
+
+def dtype_supported(*dtypes) -> bool:
+    """True iff every dtype is one the f32-accumulating kernels serve."""
+    return all(jnp.dtype(d) in KERNEL_DTYPES for d in dtypes)
+
+
+def tall_skinny_auto(nbig: int, nsmall: int) -> bool:
+    """The auto-mode shape/backend gate shared by the GEMM-shaped sites."""
+    return (nbig >= PALLAS_MIN_BIG and nsmall <= PALLAS_MAX_SMALL
+            and nbig >= 8 * nsmall and jax.default_backend() == "tpu")

@@ -4,10 +4,17 @@ The reshape-avoiding orthogonalization reduces distributed QR to (i) one big
 Gram contraction over the tall modes and (ii) a small local eigh.  Step (i)
 is this kernel: the small G stays resident in VMEM while A streams through
 in (bm x n) tiles — a reduction over the grid's sequential dimension.
+
+``interpret=None`` (default) autodetects: compiled on TPU, interpret mode
+elsewhere (see ``repro.kernels.dispatch.interpret_default`` for the
+env/flag overrides).  ``compute`` optionally demotes the streamed tiles to
+a narrower multiplicand dtype (``"bfloat16"`` under the mixed precision
+policy) — accumulation stays f32 either way.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +24,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import CompilerParams
 
 
-def _gram_kernel(a_ref, g_ref, acc_ref):
+def _gram_kernel(a_ref, g_ref, acc_ref, *, compute):
     k = pl.program_id(0)
 
     @pl.when(k == 0)
@@ -25,6 +32,8 @@ def _gram_kernel(a_ref, g_ref, acc_ref):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     blk = a_ref[...]
+    if compute is not None:
+        blk = blk.astype(compute)
     acc_ref[...] += jnp.dot(blk.T, blk, preferred_element_type=jnp.float32)
 
     @pl.when(k == pl.num_programs(0) - 1)
@@ -32,9 +41,8 @@ def _gram_kernel(a_ref, g_ref, acc_ref):
         g_ref[...] = acc_ref[...].astype(g_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def gram(a: jnp.ndarray, *, bm: int = 256, interpret: bool = True) -> jnp.ndarray:
-    """G = A^T A for real A of shape (M, N) with M >> N (N <= ~512)."""
+@functools.partial(jax.jit, static_argnames=("bm", "interpret", "compute"))
+def _gram(a: jnp.ndarray, bm: int, interpret: bool, compute) -> jnp.ndarray:
     m, n = a.shape
     pad_m = (-m) % bm
     if pad_m:
@@ -45,8 +53,10 @@ def gram(a: jnp.ndarray, *, bm: int = 256, interpret: bool = True) -> jnp.ndarra
     if pad_n:
         a = jnp.pad(a, ((0, 0), (0, pad_n)))
     np_ = a.shape[1]
+    kernel = functools.partial(
+        _gram_kernel, compute=None if compute is None else jnp.dtype(compute))
     out = pl.pallas_call(
-        _gram_kernel,
+        kernel,
         grid=(mp // bm,),
         in_specs=[pl.BlockSpec((bm, np_), lambda k: (k, 0))],
         out_specs=pl.BlockSpec((np_, np_), lambda k: (0, 0)),
@@ -59,17 +69,30 @@ def gram(a: jnp.ndarray, *, bm: int = 256, interpret: bool = True) -> jnp.ndarra
     return out[:n, :n]
 
 
+def gram(a: jnp.ndarray, *, bm: int = 256, interpret: Optional[bool] = None,
+         compute=None) -> jnp.ndarray:
+    """G = A^T A for real A of shape (M, N) with M >> N (N <= ~512)."""
+    if interpret is None:
+        from repro.kernels.dispatch import interpret_default
+        interpret = interpret_default()
+    return _gram(a, bm, bool(interpret),
+                 None if compute is None else jnp.dtype(compute).name)
+
+
 def gram_complex(a: jnp.ndarray, *, bm: int = 256,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: Optional[bool] = None,
+                 compute=None) -> jnp.ndarray:
     """G = A^H A for complex A via planar decomposition (4 real Grams/GEMMs).
 
     Pallas-TPU has no complex dtype; the PEPS library calls this wrapper.
+    The imaginary part is ``g_ri - g_ri.T`` — exactly antisymmetric by
+    construction, matching the Hermiticity of the exact G.
     """
     from repro.kernels.tiled_matmul import tiled_matmul
     ar, ai = jnp.real(a), jnp.imag(a)
-    g_rr = gram(ar, bm=bm, interpret=interpret)
-    g_ii = gram(ai, bm=bm, interpret=interpret)
-    g_ri = tiled_matmul(ar.T, ai, interpret=interpret)
+    g_rr = gram(ar, bm=bm, interpret=interpret, compute=compute)
+    g_ii = gram(ai, bm=bm, interpret=interpret, compute=compute)
+    g_ri = tiled_matmul(ar.T, ai, interpret=interpret, compute=compute)
     real = g_rr + g_ii
     imag = g_ri - g_ri.T
     return real + 1j * imag

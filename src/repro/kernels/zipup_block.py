@@ -1,0 +1,155 @@
+"""Fused zip-up inner-einsum kernels (paper Alg. 3 first-column hot spots).
+
+The zip-up block kernels of ``core/engines/zipup.py`` own three direct
+einsums that do NOT go through einsumsvd (they build/close the carry, no
+truncation): the one-layer first-column carry init, its two-layer sibling,
+and the first-row pair merge.  Each is a (chain of) matricized GEMM(s), so
+each gets a Pallas implementation built on the streaming tall-apply kernel
+(:mod:`repro.kernels.matvec`; complex operands via the planar single-GEMM
+trick) next to a dense implementation that is *verbatim* the pre-kernel
+``jnp.einsum`` — the pinned goldens of ``tests/test_engines.py`` are
+bit-identical on the dense path.
+
+Dispatch goes through :mod:`repro.kernels.dispatch` (sites
+``zipup_first_onelayer`` / ``zipup_first_twolayer`` / ``pair_merge``):
+f64/c128 operands stay dense unconditionally; in auto mode the kernels
+engage only for large operands on a TPU backend, so CPU CI runs the exact
+dense path by default.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.matvec import planar_matmul
+
+
+def _numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+# ---------------------------------------------------------------------------
+# One-layer first column: S_0 (b,f,g) x O_0 (f,c,h,k) -> (b,c,h,g,k)
+# ---------------------------------------------------------------------------
+
+def _first_onelayer_dense(s0, o0):
+    return jnp.einsum("bfg,fchk->bchgk", s0, o0)
+
+
+def _first_onelayer_pallas(s0, o0):
+    b, f, g = s0.shape
+    _, c, h, k = o0.shape
+    a_mat = jnp.transpose(s0, (0, 2, 1)).reshape(b * g, f)
+    b_mat = o0.reshape(f, c * h * k)
+    out = planar_matmul(a_mat, b_mat, compute=dispatch.kernel_compute())
+    out = out.reshape(b, g, c, h, k)
+    return jnp.transpose(out, (0, 2, 3, 1, 4))
+
+
+def first_column_onelayer(s0: jnp.ndarray, o0: jnp.ndarray) -> jnp.ndarray:
+    """Carry init of the one-layer zip-up (``zipup_block`` first column)."""
+    return dispatch.dispatch("zipup_first_onelayer", s0, o0)
+
+
+# ---------------------------------------------------------------------------
+# Two-layer first column:
+#   S_0 (b,f,F,g) x bra* (p,f,c,h,k) x ket (p,F,C,H,K) -> (b,c,C,h,H,g,k,K)
+# ---------------------------------------------------------------------------
+
+def _first_twolayer_dense(s0, tb0, tk0):
+    return jnp.einsum("bfFg,pfchk,pFCHK->bcChHgkK", s0, tb0, tk0,
+                      optimize="optimal")
+
+
+def _first_twolayer_pallas(s0, tb0, tk0):
+    b, f, F, g = s0.shape
+    p, _, c, h, k = tb0.shape
+    _, _, C, H, K = tk0.shape
+    compute = dispatch.kernel_compute()
+    # stage 1 — contract f:  (b F g, f) @ (f, p c h k)
+    a1 = jnp.transpose(s0, (0, 2, 3, 1)).reshape(b * F * g, f)
+    b1 = jnp.transpose(tb0, (1, 0, 2, 3, 4)).reshape(f, p * c * h * k)
+    t1 = planar_matmul(a1, b1, compute=compute)
+    t1 = t1.reshape(b, F, g, p, c, h, k)
+    # stage 2 — contract (p, F):  (b g c h k, p F) @ (p F, C H K)
+    a2 = jnp.transpose(t1, (0, 2, 4, 5, 6, 3, 1)).reshape(
+        b * g * c * h * k, p * F)
+    b2 = tk0.reshape(p * F, C * H * K)
+    t2 = planar_matmul(a2, b2, compute=compute)
+    t2 = t2.reshape(b, g, c, h, k, C, H, K)
+    return jnp.transpose(t2, (0, 2, 5, 3, 6, 1, 4, 7))
+
+
+def first_column_twolayer(s0: jnp.ndarray, tb0: jnp.ndarray,
+                          tk0: jnp.ndarray) -> jnp.ndarray:
+    """Carry init of the two-layer zip-up (``tb0`` pre-conjugated)."""
+    return dispatch.dispatch("zipup_first_twolayer", s0, tb0, tk0)
+
+
+# ---------------------------------------------------------------------------
+# First-row pair merge: bra* (p,u,l,d,r) x ket (p,U,L,D,R) -> (l,L,d,D,r,R)
+# (u/U are dim 1 on the first row and are summed out)
+# ---------------------------------------------------------------------------
+
+def _pair_merge_dense(tb, tk):
+    return jnp.einsum("puldr,pULDR->lLdDrR", tb, tk)
+
+
+def _pair_merge_pallas(tb, tk):
+    p, u, l, d, r = tb.shape
+    _, U, L, D, R = tk.shape
+    a_mat = jnp.moveaxis(tb, 0, -1).reshape(u * l * d * r, p)
+    b_mat = tk.reshape(p, U * L * D * R)
+    out = planar_matmul(a_mat, b_mat, compute=dispatch.kernel_compute())
+    out = out.reshape(u, l, d, r, U, L, D, R)
+    # sum out the (dim-1 on row 0, but kept general) u/U axes, then interleave
+    out = out.sum(axis=(0, 4))                       # (l, d, r, L, D, R)
+    return jnp.transpose(out, (0, 3, 1, 4, 2, 5))    # (l, L, d, D, r, R)
+
+
+def pair_merge(tb: jnp.ndarray, tk: jnp.ndarray) -> jnp.ndarray:
+    """First-row boundary pair merge (``tb`` pre-conjugated)."""
+    return dispatch.dispatch("pair_merge", tb, tk)
+
+
+# ---------------------------------------------------------------------------
+# Site registration
+# ---------------------------------------------------------------------------
+
+def _supported(*tensors) -> bool:
+    return dispatch.dtype_supported(*(t.dtype for t in tensors))
+
+
+def _auto_onelayer(s0, o0) -> bool:
+    b, f, g = s0.shape
+    _, c, h, k = o0.shape
+    return dispatch.tall_skinny_auto(b * g, max(f, c * h * k))
+
+
+def _auto_twolayer(s0, tb0, tk0) -> bool:
+    b, f, F, g = s0.shape
+    p, _, c, h, k = tb0.shape
+    _, _, C, H, K = tk0.shape
+    return dispatch.tall_skinny_auto(b * g * c * h * k,
+                                     max(f, p * F, C * H * K))
+
+
+def _auto_pair(tb, tk) -> bool:
+    return dispatch.tall_skinny_auto(_numel(tb.shape[1:]), _numel(tk.shape[1:]))
+
+
+dispatch.register_kernel("zipup_first_onelayer",
+                         pallas=_first_onelayer_pallas,
+                         dense=_first_onelayer_dense,
+                         supported=_supported, auto=_auto_onelayer)
+dispatch.register_kernel("zipup_first_twolayer",
+                         pallas=_first_twolayer_pallas,
+                         dense=_first_twolayer_dense,
+                         supported=_supported, auto=_auto_twolayer)
+dispatch.register_kernel("pair_merge",
+                         pallas=_pair_merge_pallas,
+                         dense=_pair_merge_dense,
+                         supported=_supported, auto=_auto_pair)

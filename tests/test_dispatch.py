@@ -1,0 +1,269 @@
+"""Kernel-dispatch registry gating regressions (ISSUE 7 satellite).
+
+Asserts the registry's decision procedure in BOTH directions — Pallas
+engages exactly when eligible, the dense fallback is silent otherwise —
+with the per-site counters checked on every path, plus the interpret-mode
+precedence chain, the trace-time backend signature, and the planner-replay
+contract (a repeat sweep with kernels enabled ticks no new fused misses).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bmps as B
+from repro.core import peps as P
+from repro.core import planner
+from repro.core.orthogonalize import gram_qr, tall_project
+from repro.kernels import dispatch
+from repro.kernels import zipup_block as ZB
+
+K17 = jax.random.PRNGKey(17)
+
+SITES = ("gram", "tall_apply", "zipup_first_onelayer",
+         "zipup_first_twolayer", "pair_merge")
+
+
+@pytest.fixture(autouse=True)
+def _restore_dispatch_state():
+    """Every test runs from (and restores) the default dispatch state."""
+    prev_mode = dispatch.kernel_backend()
+    prev_compute = dispatch.kernel_compute()
+    prev_interp = dispatch.set_interpret_mode("autodetect")
+    dispatch.set_interpret_mode(prev_interp)
+    yield
+    dispatch.set_kernel_backend(prev_mode)   # also clears site overrides
+    dispatch.set_kernel_compute(prev_compute)
+    dispatch.set_interpret_mode(prev_interp)
+    dispatch.reset_dispatch_stats()
+
+
+def _stats():
+    return dispatch.dispatch_stats()
+
+
+# ------------------------------------------------------------- registry ----
+
+def test_all_sites_registered():
+    regs = dispatch.registered_sites()
+    for s in SITES:
+        assert s in regs, f"site {s!r} missing from registry"
+
+
+def test_counters_exist_per_site_and_surface_through_planner():
+    st = planner.stats()
+    for s in SITES:
+        assert f"pallas_{s}_calls" in st
+        assert f"dense_{s}_calls" in st
+
+
+def test_set_kernel_backend_returns_prev_and_validates():
+    prev = dispatch.set_kernel_backend("dense")
+    assert prev in ("auto", "pallas", "dense")
+    assert dispatch.set_kernel_backend("auto") == "dense"
+    with pytest.raises(ValueError, match="bad kernel backend"):
+        dispatch.set_kernel_backend("gpu")
+    with pytest.raises(KeyError, match="unknown kernel site"):
+        dispatch.set_kernel_backend("pallas", site="nonexistent_site")
+    with pytest.raises(KeyError):
+        dispatch.dispatch("nonexistent_site")
+
+
+# --------------------------------------------------- gating, both ways ----
+
+def test_forced_pallas_engages_eligible_dtype():
+    a = jax.random.normal(jax.random.PRNGKey(0), (96, 13, 2), jnp.float32)
+    dispatch.set_kernel_backend("pallas")
+    dispatch.reset_dispatch_stats()
+    q, r = gram_qr(a, 1)
+    s = _stats()
+    assert s["pallas_gram_calls"] == 1 and s["dense_gram_calls"] == 0
+    assert s["pallas_tall_apply_calls"] == 1 and s["dense_tall_apply_calls"] == 0
+    # and the result still factorizes: a == q . r
+    rec = jnp.einsum("abk,kc->abc", q, r)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(a),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_forced_pallas_keeps_f64_dense_silently():
+    """The dtype gate is HARD: f64/c128 never route to the f32-accumulating
+    kernels, even when forced — and the fallback is silent (no warning)."""
+    a = jax.random.normal(jax.random.PRNGKey(1), (4096, 8), jnp.float64)
+    dispatch.set_kernel_backend("pallas")
+    dispatch.reset_dispatch_stats()
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        gram_qr(a, 1)
+    s = _stats()
+    assert s["pallas_gram_calls"] == 0 and s["dense_gram_calls"] == 1
+    assert s["pallas_tall_apply_calls"] == 0
+    assert s["dense_tall_apply_calls"] == 1
+
+
+def test_auto_mode_is_dense_on_cpu_even_tall_skinny():
+    a = jax.random.normal(jax.random.PRNGKey(2), (8192, 16), jnp.float32)
+    dispatch.set_kernel_backend("auto")
+    dispatch.reset_dispatch_stats()
+    gram_qr(a, 1)
+    s = _stats()
+    if jax.default_backend() != "tpu":
+        assert s["pallas_gram_calls"] == 0 and s["dense_gram_calls"] == 1
+
+
+def test_forced_dense_never_dispatches_pallas():
+    a = jax.random.normal(jax.random.PRNGKey(3), (512, 24), jnp.float32)
+    dispatch.set_kernel_backend("dense")
+    dispatch.reset_dispatch_stats()
+    gram_qr(a, 1)
+    s = _stats()
+    assert s["pallas_gram_calls"] == 0 and s["pallas_tall_apply_calls"] == 0
+    assert s["dense_gram_calls"] == 1 and s["dense_tall_apply_calls"] == 1
+
+
+def test_per_site_override_and_global_reset():
+    a = jax.random.normal(jax.random.PRNGKey(4), (256, 12), jnp.float32)
+    dispatch.set_kernel_backend("dense")
+    prev = dispatch.set_kernel_backend("pallas", site="gram")
+    assert prev == "dense"   # effective mode before the override
+    assert dispatch.kernel_backend("gram") == "pallas"
+    assert dispatch.kernel_backend("tall_apply") == "dense"
+    dispatch.reset_dispatch_stats()
+    gram_qr(a, 1)
+    s = _stats()
+    assert s["pallas_gram_calls"] == 1       # override engages gram only
+    assert s["dense_tall_apply_calls"] == 1  # global dense holds elsewhere
+    # a global set supersedes all per-site overrides
+    dispatch.set_kernel_backend("auto")
+    assert dispatch.kernel_backend("gram") == "auto"
+
+
+# ------------------------------------------------ zip-up kernel parity ----
+
+def test_zipup_kernels_match_dense_forced():
+    """Each zip-up site's Pallas path reproduces its dense einsum."""
+    k = jax.random.split(jax.random.PRNGKey(5), 6)
+    s0 = jax.random.normal(k[0], (1, 5, 7), jnp.float32)
+    o0 = jax.random.normal(k[1], (5, 1, 3, 6), jnp.float32)
+    s0c = (jax.random.normal(k[2], (1, 4, 4, 6)) +
+           1j * jax.random.normal(k[3], (1, 4, 4, 6))).astype(jnp.complex64)
+    tb0 = (jax.random.normal(k[4], (2, 4, 1, 3, 5)) +
+           1j * jax.random.normal(k[5], (2, 4, 1, 3, 5))).astype(jnp.complex64)
+    tk0 = jnp.flip(tb0, axis=1)
+    pairs = [
+        ("zipup_first_onelayer", ZB.first_column_onelayer, (s0, o0)),
+        ("zipup_first_twolayer", ZB.first_column_twolayer, (s0c, tb0, tk0)),
+        ("pair_merge", ZB.pair_merge,
+         ((jax.random.normal(k[0], (2, 1, 3, 4, 5)).astype(jnp.float32)),
+          (jax.random.normal(k[1], (2, 1, 3, 4, 5)).astype(jnp.float32)))),
+    ]
+    for site, fn, args in pairs:
+        dispatch.set_kernel_backend("dense")
+        want = fn(*args)
+        dispatch.set_kernel_backend("pallas")
+        dispatch.reset_dispatch_stats()
+        got = fn(*args)
+        assert _stats()[f"pallas_{site}_calls"] == 1, site
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4, err_msg=site)
+
+
+def test_zipup_kernels_hard_gate_c128():
+    tb = (jax.random.normal(jax.random.PRNGKey(6), (2, 1, 2, 2, 2)) +
+          1j * jax.random.normal(jax.random.PRNGKey(7), (2, 1, 2, 2, 2)))
+    assert tb.dtype == jnp.complex128
+    dispatch.set_kernel_backend("pallas")
+    dispatch.reset_dispatch_stats()
+    ZB.pair_merge(tb.conj(), tb)
+    s = _stats()
+    assert s["pallas_pair_merge_calls"] == 0
+    assert s["dense_pair_merge_calls"] == 1
+
+
+def test_tall_project_matches_tensordot():
+    a = jax.random.normal(jax.random.PRNGKey(8), (17, 9, 11), jnp.float32)
+    mat = jax.random.normal(jax.random.PRNGKey(9), (99, 4), jnp.float32)
+    want = jnp.tensordot(a, mat.reshape(9, 11, 4), axes=((1, 2), (0, 1)))
+    dispatch.set_kernel_backend("pallas")
+    got = tall_project(a, mat, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------- interpret + config ----
+
+def test_interpret_precedence_flag_env_autodetect(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert dispatch.interpret_default() == (jax.default_backend() != "tpu")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "compiled")
+    assert dispatch.interpret_default() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert dispatch.interpret_default() is True
+    # the process flag outranks the environment
+    dispatch.set_interpret_mode("compiled")
+    assert dispatch.interpret_default() is False
+    dispatch.set_interpret_mode("interpret")
+    assert dispatch.interpret_default() is True
+    dispatch.set_interpret_mode("autodetect")
+    assert dispatch.interpret_default() is True   # env "1" applies again
+    with pytest.raises(ValueError, match="bad interpret mode"):
+        dispatch.set_interpret_mode("fast")
+
+
+def test_backend_signature_tracks_every_trace_time_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    sigs = {dispatch.backend_signature()}
+
+    dispatch.set_kernel_backend("pallas")
+    sigs.add(dispatch.backend_signature())
+    dispatch.set_kernel_backend("auto")
+    dispatch.set_kernel_backend("pallas", site="gram")
+    sigs.add(dispatch.backend_signature())
+    dispatch.set_kernel_backend("auto")
+    dispatch.set_kernel_compute("bfloat16")
+    sigs.add(dispatch.backend_signature())
+    dispatch.set_kernel_compute(None)
+    dispatch.set_interpret_mode(
+        "compiled" if jax.default_backend() != "tpu" else "interpret")
+    sigs.add(dispatch.backend_signature())
+    dispatch.set_interpret_mode("autodetect")
+    assert len(sigs) == 5, "every knob must change the signature"
+    assert dispatch.backend_signature() in sigs  # restored == first
+
+
+# -------------------------------------------------------- planner replay ----
+
+def test_planner_replay_with_kernels_enabled_no_new_misses():
+    """With forced-Pallas dispatch, a repeat of an identical sweep replays
+    the fused cache (zero new misses) — the dispatch signature is part of
+    the key, and it is stable across the two runs."""
+    rows = P.random_onelayer(4, 4, 2, jax.random.PRNGKey(5))
+    rows = [[t.astype(jnp.complex64) for t in r] for r in rows]
+    opt = B.BMPS.randomized(6, niter=2, oversample=4)
+    dispatch.set_kernel_backend("pallas")
+    v1 = B.contract_onelayer(rows, opt, key=K17)
+    before = planner.stats()
+    assert before["pallas_gram_calls"] > 0   # kernels actually engaged
+    v2 = B.contract_onelayer(rows, opt, key=K17)
+    delta = planner.stats_since(before)
+    assert delta["fused_misses"] == 0, "replay must not re-trace"
+    assert delta["fused_hits"] > 0
+    # counters tick at trace time: a pure replay adds no dispatch calls
+    assert delta["pallas_gram_calls"] == 0
+    np.testing.assert_allclose(complex(v2), complex(v1), rtol=1e-5)
+
+
+def test_flipping_backend_is_a_new_fused_cache_key():
+    rows = P.random_onelayer(3, 3, 2, jax.random.PRNGKey(6))
+    rows = [[t.astype(jnp.complex64) for t in r] for r in rows]
+    opt = B.BMPS.randomized(4, niter=1, oversample=2)
+    dispatch.set_kernel_backend("dense")
+    B.contract_onelayer(rows, opt, key=K17)
+    before = planner.stats()
+    dispatch.set_kernel_backend("pallas")
+    B.contract_onelayer(rows, opt, key=K17)
+    delta = planner.stats_since(before)
+    assert delta["fused_misses"] > 0, (
+        "a backend flip must re-trace, not replay the dense executable")

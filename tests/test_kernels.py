@@ -7,8 +7,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
+from repro.kernels import zipup_block as zb
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gram import gram, gram_complex
+from repro.kernels.matvec import planar_matmul, tall_apply
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.tiled_matmul import tiled_matmul
 
@@ -73,6 +75,129 @@ def test_gram_feeds_orthogonalization():
     lam = np.maximum(lam, 1e-10)
     q = np.asarray(a, np.float64) @ (x / np.sqrt(lam))
     np.testing.assert_allclose(q.T @ q, np.eye(32), atol=1e-3)
+
+
+# ------------------------------------------------------- tall-apply GEMM ----
+@pytest.mark.parametrize("shape", [
+    (512, 24, 8),     # the rSVD projection shape class
+    (100, 7, 1),      # N=1: single output column (rank-1 projection)
+    (37, 3, 130),     # N over the 128-lane pad boundary
+    (257, 129, 127),  # every dim non-tile-multiple, N just under the pad
+    (1, 5, 5),        # single row
+])
+def test_tall_apply_sweep(shape):
+    m, k, n = shape
+    a = _rnd(jax.random.PRNGKey(11), (m, k), jnp.float32)
+    b = _rnd(jax.random.PRNGKey(12), (k, n), jnp.float32)
+    got = tall_apply(a, b, bm=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(m=st.integers(1, 300), k=st.integers(1, 40), n=st.integers(1, 160),
+       seed=st.integers(0, 1000))
+def test_tall_apply_property(m, k, n, seed):
+    a = _rnd(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+    b = _rnd(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+    got = tall_apply(a, b, bm=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=8)
+@given(m=st.integers(1, 200), k=st.integers(1, 30), n=st.integers(1, 140),
+       seed=st.integers(0, 1000))
+def test_planar_matmul_complex_property(m, k, n, seed):
+    """The complex planar path: one doubled real GEMM equals the complex
+    product (exactly the c64 contraction, not an approximation)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    a = (jax.random.normal(ks[0], (m, k)) +
+         1j * jax.random.normal(ks[1], (m, k))).astype(jnp.complex64)
+    b = (jax.random.normal(ks[2], (k, n)) +
+         1j * jax.random.normal(ks[3], (k, n))).astype(jnp.complex64)
+    got = planar_matmul(a, b, bm=64, interpret=True)
+    assert got.dtype == jnp.complex64
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_planar_matmul_real_passthrough():
+    a = _rnd(jax.random.PRNGKey(13), (96, 17), jnp.float32)
+    b = _rnd(jax.random.PRNGKey(14), (17, 4), jnp.float32)
+    got = planar_matmul(a, b, interpret=True)
+    want = tall_apply(a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tall_apply_bf16_compute_bounded():
+    """bf16 multiplicands + f32 accumulation: ~3 decimal digits survive."""
+    a = _rnd(jax.random.PRNGKey(15), (512, 24), jnp.float32)
+    b = _rnd(jax.random.PRNGKey(16), (24, 8), jnp.float32)
+    got = np.asarray(tall_apply(a, b, interpret=True, compute="bfloat16"),
+                     np.float64)
+    want = np.asarray(a @ b, np.float64)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert 1e-8 < rel <= 2e-2   # bf16-sized, i.e. compute= actually engaged
+
+
+# ------------------------------------------------------ zip-up micro-ops ----
+def _cplx(key, shape):
+    k1, k2 = jax.random.split(key)
+    return (jax.random.normal(k1, shape) +
+            1j * jax.random.normal(k2, shape)).astype(jnp.complex64)
+
+
+@settings(deadline=None, max_examples=8)
+@given(b=st.integers(1, 4), f=st.integers(1, 5), g=st.integers(1, 6),
+       c=st.integers(1, 4), h=st.integers(1, 3), k=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_zipup_first_onelayer_property(b, f, g, c, h, k, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    s0 = _rnd(ks[0], (b, f, g), jnp.float32)
+    o0 = _rnd(ks[1], (f, c, h, k), jnp.float32)
+    got = zb._first_onelayer_pallas(s0, o0)
+    want = zb._first_onelayer_dense(s0, o0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=6)
+@given(b=st.integers(1, 3), f=st.integers(1, 3), g=st.integers(1, 4),
+       c=st.integers(1, 3), h=st.integers(1, 2), k=st.integers(1, 2),
+       p=st.integers(1, 2), seed=st.integers(0, 1000))
+def test_zipup_first_twolayer_property(b, f, g, c, h, k, p, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s0 = _cplx(ks[0], (b, f, f, g))
+    tb0 = _cplx(ks[1], (p, f, c, h, k))
+    tk0 = _cplx(ks[2], (p, f, c, h, k))
+    got = zb._first_twolayer_pallas(s0, tb0, tk0)
+    want = zb._first_twolayer_dense(s0, tb0, tk0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(deadline=None, max_examples=6)
+@given(p=st.integers(1, 2), u=st.integers(1, 3), l=st.integers(1, 3),
+       d=st.integers(1, 3), r=st.integers(1, 3), seed=st.integers(0, 1000))
+def test_zipup_pair_merge_property(p, u, l, d, r, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    tb = _cplx(ks[0], (p, u, l, d, r))
+    tk = _cplx(ks[1], (p, u, l, d, r))
+    got = zb._pair_merge_pallas(tb.conj(), tk)
+    want = zb._pair_merge_dense(tb.conj(), tk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gram_complex_imag_exactly_antisymmetric():
+    """The planar Gram builds imag(G) as ``g_ri - g_ri.T`` — antisymmetry
+    is exact by construction (array_equal, not allclose), which is what
+    keeps eigh's Hermitian assumption safe downstream."""
+    a = _cplx(jax.random.PRNGKey(17), (200, 24))
+    g = np.asarray(gram_complex(a, interpret=True))
+    np.testing.assert_array_equal(g.imag, -g.imag.T)
+    np.testing.assert_array_equal(g.real, g.real.T)
 
 
 # ------------------------------------------------------------- attention ----
