@@ -59,6 +59,20 @@ test-precision:
 bench-kernels:
 	PYTHONPATH=src $(PY) benchmarks/bench_kernels.py
 
+# Robustness lane: fault injection + the guard ladder, checkpoint
+# dtype/atomicity/GC, and the ITE/VQE chaos-resume tests (subprocess
+# kill/resume, incl. the 8-virtual-device distributed variant — the
+# subprocesses force their own device count, so no XLA_FLAGS here).
+.PHONY: test-robustness
+test-robustness:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_runtime_guard.py \
+	    tests/test_checkpoint.py tests/test_resume.py
+
+# Checkpoint-save overhead per ITE step + cold-vs-warm planner-cache startup.
+.PHONY: bench-resume
+bench-resume:
+	PYTHONPATH=src $(PY) benchmarks/bench_resume.py
+
 .PHONY: docs-check
 docs-check:
 	$(PY) tools/check_doc_links.py

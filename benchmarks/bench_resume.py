@@ -1,0 +1,92 @@
+"""Robustness overheads: checkpoint-save cost per ITE step and the
+cold-vs-warm planner path-cache startup (ISSUE 8).
+
+Two questions a service owner asks before turning the hardening on:
+
+1. What does ``checkpoint_every=1`` cost an ITE step?  Measured as the
+   wall-time delta of an identical evolution with and without async
+   checkpointing (the device->host snapshot is synchronous; the disk write
+   overlaps the next step).
+2. What does the persistent planner cache save a restarted replica?
+   Measured honestly: only the opt_einsum *path searches* are persisted —
+   the jit compiles still happen in the fresh process — so the number
+   reported is the path-search time itself (cold search vs preloaded
+   lookup), next to the path-cache hit counters that prove the warm replay
+   ran with zero misses.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import jax
+
+from benchmarks.common import SCALE, emit, emit_info, timeit
+from repro.core import planner
+from repro.core.bmps import BMPS
+from repro.core.einsumsvd import RandomizedSVD
+from repro.core.ite import ite_run
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import QRUpdate, computational_zeros
+
+
+def _ite(steps, ckpt_dir=None, every=0):
+    svd = RandomizedSVD(niter=2, oversample=4)
+    nrow, ncol = (3, 3) if SCALE == "small" else (4, 4)
+    obs = tfi_hamiltonian(nrow, ncol)
+    return ite_run(computational_zeros(nrow, ncol), obs, 0.05, steps,
+                   QRUpdate(rank=2, svd=svd), BMPS(8, svd=svd),
+                   measure_every=steps, key=jax.random.PRNGKey(0),
+                   checkpoint_dir=ckpt_dir, checkpoint_every=every,
+                   resume=False)
+
+
+def bench_checkpoint_overhead():
+    steps = 4 if SCALE == "small" else 10
+    _ite(steps)   # warm the planner/jit caches so the delta is IO-only
+    t_off = timeit(lambda: _ite(steps), repeats=3, warmup=0)
+    d = tempfile.mkdtemp(prefix="bench_resume_")
+    try:
+        t_on = timeit(lambda: _ite(steps, ckpt_dir=d, every=1),
+                      repeats=3, warmup=0)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    per_step = (t_on - t_off) / steps
+    emit("resume/ite_step_plain", t_off / steps)
+    emit("resume/ite_step_ckpt_every_1", t_on / steps)
+    emit("resume/ckpt_overhead_per_step", max(per_step, 0.0),
+         f"{100.0 * max(per_step, 0.0) * steps / t_off:.1f}% of run")
+
+
+def bench_path_cache_startup():
+    # cold: real opt_einsum searches for every distinct signature
+    planner.clear()
+    t_cold = timeit(lambda: _ite(2), repeats=1, warmup=0)
+    stats = planner.stats()
+    cold_misses = stats["path_misses"]
+    f = tempfile.mktemp(suffix=".json")
+    n = planner.save_path_cache(f)
+
+    # warm: preload, replay the identical workload (jit compiles still run —
+    # only the path searches are persisted; the counters prove zero misses)
+    planner.clear()
+    t_load = timeit(lambda: planner.load_path_cache(f), repeats=1, warmup=0)
+    before = planner.stats()
+    t_warm = timeit(lambda: _ite(2), repeats=1, warmup=0)
+    delta = planner.stats_since(before)
+    emit("resume/startup_cold", t_cold, f"{cold_misses} path searches")
+    emit("resume/startup_warm_preloaded", t_warm,
+         f"misses={delta['path_misses']} hits={delta['path_hits']}")
+    emit("resume/path_cache_load", t_load, f"{n} entries")
+    emit_info("resume/warm_zero_misses", str(delta["path_misses"] == 0))
+
+
+def main():
+    bench_checkpoint_overhead()
+    bench_path_cache_startup()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import save_rows
+    main()
+    save_rows("bench_resume.json")

@@ -18,7 +18,8 @@ import traceback
 
 from benchmarks import (bench_caching, bench_contraction, bench_distributed,
                         bench_engines, bench_evolution, bench_ite,
-                        bench_kernels, bench_roofline, bench_rqc, bench_vqe)
+                        bench_kernels, bench_resume, bench_roofline,
+                        bench_rqc, bench_vqe)
 from benchmarks.common import emit_info, save_rows
 
 SUITES = {
@@ -32,6 +33,7 @@ SUITES = {
     "distributed": bench_distributed,  # paper Section V (ISSUE 4)
     "engines": bench_engines,          # boundary-engine frontier (ISSUE 6)
     "kernels": bench_kernels,          # Pallas kernels + mixed precision (ISSUE 7)
+    "resume": bench_resume,            # checkpoint overhead + warm start (ISSUE 8)
 }
 
 

@@ -4,12 +4,22 @@
   tree path, so a checkpoint written on a (16,16) mesh restores onto (2,16,16)
   or a single CPU device (elastic scaling / local debugging).
 * **Atomic**: written to ``step_XXXX.tmp`` then ``os.replace``d; a crashed
-  writer never corrupts the latest checkpoint.
+  writer never corrupts the latest checkpoint.  Orphaned ``*.tmp`` dirs left
+  by a process killed mid-write are swept on manager init, and ``all_steps``
+  ignores any published directory whose manifest is unreadable — a torn
+  write can never shadow the previous good step (see
+  ``tests/test_checkpoint.py`` and the ``checkpoint.write`` fault site).
 * **Async**: the device->host transfer happens synchronously (cheap), the
   disk write happens on a background thread; ``wait()`` joins before exit.
 * **Self-validating**: a manifest with per-leaf shapes/dtypes + step is
   stored; ``restore`` verifies it and re-device_puts with the *target*
   shardings.
+
+Dtypes: numpy-native kinds — floats, ints, unsigned, bool, **complex**
+(PEPS tensors are c64/c128!), and unicode (JSON-in-a-leaf metadata) — are
+stored as-is and round-trip bit-identically.  Only the ml_dtypes extension
+types (bf16, fp8: numpy kind ``'V'``, whose raw ``.npy`` files load back as
+void scalars) are widened to float32 on disk and narrowed back on restore.
 """
 from __future__ import annotations
 
@@ -22,6 +32,14 @@ from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+from repro.core import faults
+
+#: numpy dtype kinds stored natively (everything .npy round-trips exactly):
+#: float, int, unsigned, bool, complex, unicode.  Kind 'V' (ml_dtypes bf16/
+#: fp8 register as void structs) must be widened — np.save writes them but
+#: np.load returns raw void scalars.
+_NATIVE_KINDS = "fiubcU"
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -39,6 +57,10 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        # Sweep orphaned tmp dirs from a previous process killed mid-write.
+        # Only *.tmp is touched: published steps are never eligible.
+        for p in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, blocking: bool = False):
@@ -48,6 +70,7 @@ class CheckpointManager:
                 for k, v in _flatten(tree).items()}
 
         def write():
+            fault = faults.should_fire("checkpoint.write")
             tmp = self.dir / f"step_{step:08d}.tmp"
             final = self.dir / f"step_{step:08d}"
             if tmp.exists():
@@ -57,13 +80,23 @@ class CheckpointManager:
             for key, arr in host.items():
                 fname = key.replace("/", "__") + ".npy"
                 stored = arr
-                if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16, fp8, ...)
+                if arr.dtype.kind not in _NATIVE_KINDS:  # ml_dtypes bf16/fp8
                     stored = arr.astype(np.float32)
                 np.save(tmp / fname, stored)
                 manifest["leaves"][key] = {
                     "file": fname, "shape": list(arr.shape),
                     "dtype": str(arr.dtype)}
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
+                if fault is not None and fault.action == "torn":
+                    # injected kill mid-write: partial tmp, never published
+                    return
+            body = json.dumps(manifest)
+            if fault is not None and fault.action == "torn_final":
+                # injected kill mid-publish on a non-atomic filesystem: the
+                # final dir exists but its manifest is truncated garbage
+                (tmp / "manifest.json").write_text(body[: len(body) // 2])
+                os.replace(tmp, final)
+                return
+            (tmp / "manifest.json").write_text(body)
             if final.exists():
                 shutil.rmtree(final)
             os.replace(tmp, final)
@@ -91,6 +124,10 @@ class CheckpointManager:
         for p in self.dir.glob("step_*"):
             if p.suffix == ".tmp" or not (p / "manifest.json").exists():
                 continue
+            try:
+                json.loads((p / "manifest.json").read_text())
+            except (OSError, ValueError):
+                continue   # torn publish: never shadows a good step
             out.append(int(p.name.split("_")[1]))
         return sorted(out)
 
@@ -98,24 +135,46 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, target_tree, shardings=None):
-        """Restore into the structure of ``target_tree`` (ShapeDtypeStructs or
-        arrays), placing leaves with ``shardings`` (elastic resharding)."""
+    def _manifest(self, step: int) -> dict:
         final = self.dir / f"step_{step:08d}"
-        manifest = json.loads((final / "manifest.json").read_text())
-        flat_target = _flatten(target_tree)
-        flat_shard = _flatten(shardings) if shardings is not None else {}
+        try:
+            return json.loads((final / "manifest.json").read_text())
+        except FileNotFoundError:
+            raise FileNotFoundError(
+                f"no checkpoint for step {step} in {self.dir} "
+                f"(available steps: {self.all_steps() or 'none'})") from None
+
+    def load(self, step: int) -> Dict[str, np.ndarray]:
+        """Load a checkpoint as a flat ``{tree-path: np.ndarray}`` dict.
+
+        Target-free restore: callers that know their own tree layout (the
+        ITE/VQE resume paths, which must also recover non-leaf state like
+        ``PEPS.log_scale``) decode the flat dict directly.  Dtypes are
+        narrowed back per the manifest (bf16 leaves were widened on disk)."""
+        final = self.dir / f"step_{step:08d}"
+        manifest = self._manifest(step)
         out = {}
         for key, meta in manifest["leaves"].items():
-            if key not in flat_target:
-                raise KeyError(f"checkpoint leaf {key} not in target tree")
             arr = np.load(final / meta["file"])
-            want = flat_target[key]
-            if tuple(arr.shape) != tuple(want.shape):
-                raise ValueError(f"{key}: shape {arr.shape} != {want.shape}")
             if str(arr.dtype) != meta["dtype"]:    # stored widened (bf16->f32)
                 import ml_dtypes  # noqa: F401 — registers jax dtypes w/ numpy
                 arr = arr.astype(np.dtype(meta["dtype"]))
+            out[key] = arr
+        return out
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Restore into the structure of ``target_tree`` (ShapeDtypeStructs or
+        arrays), placing leaves with ``shardings`` (elastic resharding)."""
+        flat = self.load(step)
+        flat_target = _flatten(target_tree)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key, arr in flat.items():
+            if key not in flat_target:
+                raise KeyError(f"checkpoint leaf {key} not in target tree")
+            want = flat_target[key]
+            if tuple(arr.shape) != tuple(want.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {want.shape}")
             sh = flat_shard.get(key)
             out[key] = (jax.device_put(arr, sh) if sh is not None
                         else jax.numpy.asarray(arr))

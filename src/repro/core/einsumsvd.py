@@ -151,7 +151,12 @@ def einsumsvd(
         from repro.core.precision import wrap_svd
         option = wrap_svd(option, precision)
     op = ImplicitOperator(tensors, subscripts, row, col)
-    u, s, v = option(op, rank, key)
+    # Every truncation in the library funnels through this seam — boundary
+    # zip-up rows, the variational engine's fits, full-update bond seeds —
+    # so the runtime guard's detect/escalate/retry loop wraps exactly here.
+    # Unguarded (no active RuntimeGuard), this is option(op, rank, key).
+    from repro.core.runtime_guard import guarded_solve
+    u, s, v = guarded_solve(option, op, rank, key)
     if absorb == "none":
         return u, s, v
     return absorb_factors(u, s, v, absorb)

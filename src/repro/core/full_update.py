@@ -85,6 +85,22 @@ def _log_fidelity(f) -> None:
     _FIDELITY_LOG.append(f)
 
 
+def pending_fidelities() -> List[float]:
+    """The undrained window, synced to host, WITHOUT clearing it.
+
+    Checkpointing uses this: a mid-window snapshot must carry the bonds
+    logged since the last measurement so a resumed run drains the same
+    window the uninterrupted run would have."""
+    return [float(jnp.real(f)) for f in _FIDELITY_LOG]
+
+
+def restore_fidelities(values) -> None:
+    """Replace the undrained window (resume path; pairs with
+    :func:`pending_fidelities`)."""
+    _FIDELITY_LOG.clear()
+    _FIDELITY_LOG.extend(float(v) for v in values)
+
+
 # ---------------------------------------------------------------------------
 # Environment extraction
 # ---------------------------------------------------------------------------
@@ -337,6 +353,36 @@ def full_update_bond(state, g, s0: Tuple[int, int], s1: Tuple[int, int],
     b0 = right                                           # (m,y,c,d)
 
     ar, br, fid = _fused_optimize(env, theta, a0, b0, update)
+
+    # Runtime-guard hook: a non-finite ALS result or a truncation fidelity
+    # below the configured floor retries the bond once from a deterministic
+    # exact-SVD seed (rSVD seeds on ill-conditioned reduced networks are
+    # where ALS divergence starts).  NaN after the retry raises a
+    # structured GuardExhaustedError; a still-low fidelity is recorded as
+    # degraded-but-accepted unless fidelity_strict.  See core/runtime_guard.
+    from repro.core import runtime_guard
+    guard = runtime_guard.current()
+    if guard is not None and not isinstance(fid, jax.core.Tracer):
+        cause = runtime_guard.check_bond(guard, ar, br, fid)
+        if cause is not None:
+            runtime_guard.bond_failure(guard, cause, retried=False,
+                                       detail=f"bond {s0}->{s1}")
+            from repro.core.einsumsvd import DirectSVD
+            left, right = einsumsvd(
+                DirectSVD(), [g, ra, rb], ["xypq", "abpk", "cdqk"],
+                row="xab", col="ycd", rank=update.rank, absorb="both",
+                key=seed_key)
+            a0 = jnp.moveaxis(left, 0, 2)
+            b0 = right
+            ar, br, fid = _fused_optimize(env, theta, a0, b0, update)
+            recheck = runtime_guard.check_bond(guard, ar, br, fid)
+            if recheck is None:
+                runtime_guard.bond_recovered(guard, cause)
+            else:
+                runtime_guard.bond_failure(
+                    guard, recheck, retried=True,
+                    detail=f"bond {s0}->{s1} fid={float(jnp.real(fid)):.3e}")
+
     _log_fidelity(fid)
 
     if horizontal:

@@ -15,10 +15,30 @@ ALS.  The per-bond truncation fidelities are aggregated into the result.
 
 The Rayleigh quotient <psi|H|psi>/<psi|psi> (via cached-environment
 expectation) tracks convergence to the ground state.
+
+Production hardening (see ``docs/robustness.md``):
+
+* ``checkpoint_dir=``/``checkpoint_every=`` snapshot the *complete* loop
+  state — site tensors, ``log_scale``, the PRNG key, the energy trace, the
+  cached row environments and refresh counter, the undrained fidelity
+  window — through :class:`repro.checkpoint.manager.CheckpointManager`
+  (async write, atomic publish).  A killed run re-invoked with the same
+  arguments resumes from the latest checkpoint and reproduces the
+  uninterrupted run's per-step energies **bit-identically**: environments
+  and the refresh counter are part of the snapshot precisely so the resume
+  consumes the PRNG key stream at the same offsets the uninterrupted run
+  would have (an extra forced env refresh would split the key once more
+  and diverge every subsequent truncation).
+* ``guard=`` activates the runtime guard (:mod:`repro.core.runtime_guard`)
+  over the whole evolution: NaN/Inf or norm collapse in any einsumsvd
+  truncation and fidelity-floor violations in the full update retry under
+  the escalation ladder; the structured :class:`GuardReport` lands in
+  ``ITEResult.guard``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -27,6 +47,7 @@ import numpy as np
 
 from repro.core import gates as G
 from repro.core import planner
+from repro.core import runtime_guard
 from repro.core import statevector as sv
 from repro.core.bmps import BMPS
 from repro.core.environments import row_environments
@@ -52,13 +73,102 @@ class ITEResult:
     steps: List[int]
     # planner cache counters over the run (path/fused hit rates) — the
     # evolution loop re-applies the same Trotter moments every step, so
-    # after step 1 the einsumsvd engine should be all cache hits.
+    # after step 1 the einsumsvd engine should be all cache hits.  For a
+    # resumed run this covers the WHOLE logical run: the checkpointed
+    # counter delta of the earlier process plus this process's delta.
     planner_stats: Optional[dict] = None
     # FullUpdate only: per measurement point, the worst (minimum) bond
     # truncation fidelity observed since the previous measurement — the
     # cheap environment-metric estimate |<ab|E|theta>|^2 normalized (see
     # repro.core.full_update).  None for QRUpdate/DirectUpdate runs.
     fidelities: Optional[List[float]] = None
+    # Runtime-guard report (guard= runs only): every detected failure and
+    # recovery over the evolution.  None when no guard was active.
+    guard: Optional[runtime_guard.GuardReport] = None
+    # The checkpoint step this run resumed from, or None for a fresh run.
+    resumed_from: Optional[int] = None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint encode/decode (flat {path: array} trees; see CheckpointManager)
+# ---------------------------------------------------------------------------
+
+def _ite_snapshot(state: PEPS, key, energies, measured_at, fidelities,
+                  fid_window, since_refresh, envs, planner_delta,
+                  next_step: int) -> dict:
+    """The complete ITE loop state as one flat checkpointable tree.
+
+    ``log_scale`` is a PEPS *aux* field (not a pytree leaf), the cached
+    environments and ``since_refresh`` decide future PRNG-key consumption,
+    and the fidelity window is mid-measurement state — all of it must ride
+    in the snapshot for the resume to be bit-identical."""
+    tree = {}
+    for i in range(state.nrow):
+        for j in range(state.ncol):
+            tree[f"sites/{i}_{j}"] = state.sites[i][j]
+    tree["log_scale"] = jnp.asarray(state.log_scale)
+    tree["key"] = key
+    tree["energies"] = np.asarray(energies, dtype=np.float64)
+    tree["measured_at"] = np.asarray(measured_at, dtype=np.int64)
+    tree["since_refresh"] = np.asarray(since_refresh, dtype=np.int64)
+    if fidelities is not None:
+        tree["fidelities"] = np.asarray(fidelities, dtype=np.float64)
+        tree["fid_window"] = np.asarray(fid_window, dtype=np.float64)
+    if envs is not None:
+        top, bottom = envs
+        for lvl, mps in enumerate(top):
+            for c, t in enumerate(mps):
+                tree[f"envs_top/{lvl}/{c}"] = t
+        for lvl, mps in enumerate(bottom):
+            for c, t in enumerate(mps):
+                tree[f"envs_bot/{lvl}/{c}"] = t
+    meta = {"next_step": next_step, "planner_delta": planner_delta}
+    tree["meta_json"] = np.array(json.dumps(meta))
+    return tree
+
+
+def _decode_env_levels(flat: dict, prefix: str):
+    levels: dict = {}
+    for k, v in flat.items():
+        if not k.startswith(prefix):
+            continue
+        _, lvl, c = k.split("/")
+        levels.setdefault(int(lvl), {})[int(c)] = jnp.asarray(v)
+    return [[levels[l][c] for c in sorted(levels[l])]
+            for l in sorted(levels)] or None
+
+
+def _ite_restore(flat: dict, nrow: int, ncol: int):
+    """Invert :func:`_ite_snapshot` -> (state, key, loop-state dict)."""
+    sites = [[jnp.asarray(flat[f"sites/{i}_{j}"]) for j in range(ncol)]
+             for i in range(nrow)]
+    state = PEPS(sites, jnp.asarray(flat["log_scale"]))
+    key = jnp.asarray(flat["key"])
+    meta = json.loads(str(flat["meta_json"][()]))
+    top = _decode_env_levels(flat, "envs_top/")
+    bot = _decode_env_levels(flat, "envs_bot/")
+    return state, key, {
+        "energies": [float(e) for e in flat["energies"]],
+        "measured_at": [int(s) for s in flat["measured_at"]],
+        "fidelities": ([float(f) for f in flat["fidelities"]]
+                       if "fidelities" in flat else None),
+        "fid_window": ([float(f) for f in flat["fid_window"]]
+                       if "fid_window" in flat else []),
+        "since_refresh": int(flat["since_refresh"]),
+        "envs": (top, bot) if top is not None else None,
+        "next_step": int(meta["next_step"]),
+        "planner_delta": meta.get("planner_delta") or {},
+    }
+
+
+def _merge_planner_stats(prior: dict, current: dict) -> dict:
+    """Whole-logical-run counters: sum the deltas, keep current cache sizes."""
+    out = dict(current)
+    for k, v in prior.items():
+        if k.endswith("_cache_size"):
+            continue
+        out[k] = out.get(k, 0) + v
+    return out
 
 
 def ite_run(
@@ -71,19 +181,35 @@ def ite_run(
     measure_every: int = 10,
     key=None,
     callback: Optional[Callable] = None,
+    *,
+    guard=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    checkpoint_keep: int = 3,
+    resume: bool = True,
 ) -> ITEResult:
     """Run TEBD imaginary time evolution on a PEPS.
 
     ``update`` selects the two-site truncation tier: :class:`QRUpdate`
     (simple update), :class:`DirectUpdate`, or :class:`FullUpdate`
     (environment-aware; row environments are cached and refreshed every
-    ``update.env_refresh_every`` gate applications)."""
+    ``update.env_refresh_every`` gate applications).
+
+    ``guard`` activates the runtime guard for the whole run (``True`` for
+    defaults, or a :class:`~repro.core.runtime_guard.GuardConfig`).
+
+    ``checkpoint_dir`` + ``checkpoint_every=N`` snapshot the full loop
+    state every N steps (async, atomic); with ``resume=True`` (default) a
+    re-invocation picks up from the latest checkpoint in the directory and
+    reproduces the uninterrupted run bit-identically (see module
+    docstring).  ``checkpoint_keep`` is the GC retention."""
     check_update(update)
     if key is None:
         key = jax.random.PRNGKey(2020)
     moments = trotter_moments(obs, tau)
     energies, measured_at = [], []
     planner_before = planner.stats()
+    prior_planner_delta: dict = {}
 
     is_full = isinstance(update, FullUpdate)
     fidelities: Optional[List[float]] = [] if is_full else None
@@ -93,35 +219,76 @@ def ite_run(
         from repro.core import full_update as _fu
         _fu.drain_fidelities()  # start the log window fresh
 
-    for step in range(steps):
-        for g, sites in moments:
-            key, sub = jax.random.split(key)
-            if is_full and len(sites) == 2:
-                s0, s1 = state.coords(sites[0]), state.coords(sites[1])
-                if (envs is None or since_refresh >= update.env_refresh_every
-                        or not _fu.envs_compatible(state, s0, s1, envs)):
-                    key, ek = jax.random.split(key)
-                    envs = row_environments(state, _fu.env_option(update), ek)
-                    since_refresh = 0
-            state = apply_operator(state, g, sites, update, key=sub, envs=envs)
-            since_refresh += 1
-        # environments survive normalize_sites (the positive-fixed metric is
-        # invariant under uniform rescales) and step boundaries — only the
-        # refresh cadence and bond-dimension growth invalidate them
-        state = normalize_sites(state)
-        if (step + 1) % measure_every == 0 or step == steps - 1:
-            key, sub = jax.random.split(key)
-            e = float(jnp.real(expectation(state, obs, contract, use_cache=True,
-                                           key=sub)))
-            energies.append(e)
-            measured_at.append(step + 1)
+    manager = None
+    start_step = 0
+    resumed_from = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        latest = manager.latest_step() if resume else None
+        if latest is not None:
+            state, key, loop = _ite_restore(manager.load(latest),
+                                            state.nrow, state.ncol)
+            energies, measured_at = loop["energies"], loop["measured_at"]
+            since_refresh = loop["since_refresh"]
+            envs = loop["envs"]
+            start_step = loop["next_step"]
+            prior_planner_delta = loop["planner_delta"]
+            resumed_from = latest
             if is_full:
-                window = _fu.drain_fidelities()
-                fidelities.append(min(window) if window else float("nan"))
-            if callback is not None:
-                callback(step + 1, e, state)
-    return ITEResult(state, energies, measured_at,
-                     planner.stats_since(planner_before), fidelities)
+                fidelities = loop["fidelities"] or []
+                _fu.restore_fidelities(loop["fid_window"])
+
+    active_guard = runtime_guard.resolve(guard)
+    with runtime_guard.maybe(active_guard):
+        for step in range(start_step, steps):
+            for g, sites in moments:
+                key, sub = jax.random.split(key)
+                if is_full and len(sites) == 2:
+                    s0, s1 = state.coords(sites[0]), state.coords(sites[1])
+                    if (envs is None
+                            or since_refresh >= update.env_refresh_every
+                            or not _fu.envs_compatible(state, s0, s1, envs)):
+                        key, ek = jax.random.split(key)
+                        envs = row_environments(state, _fu.env_option(update),
+                                                ek)
+                        since_refresh = 0
+                state = apply_operator(state, g, sites, update, key=sub,
+                                       envs=envs)
+                since_refresh += 1
+            # environments survive normalize_sites (the positive-fixed metric
+            # is invariant under uniform rescales) and step boundaries — only
+            # the refresh cadence and bond-dimension growth invalidate them
+            state = normalize_sites(state)
+            if (step + 1) % measure_every == 0 or step == steps - 1:
+                key, sub = jax.random.split(key)
+                e = float(jnp.real(expectation(state, obs, contract,
+                                               use_cache=True, key=sub)))
+                energies.append(e)
+                measured_at.append(step + 1)
+                if is_full:
+                    window = _fu.drain_fidelities()
+                    fidelities.append(min(window) if window else float("nan"))
+                if callback is not None:
+                    callback(step + 1, e, state)
+            if manager is not None and checkpoint_every > 0 \
+                    and (step + 1) % checkpoint_every == 0:
+                manager.save(step + 1, _ite_snapshot(
+                    state, key, energies, measured_at, fidelities,
+                    _fu.pending_fidelities() if is_full else [],
+                    since_refresh, envs,
+                    _merge_planner_stats(prior_planner_delta,
+                                         planner.stats_since(planner_before)),
+                    next_step=step + 1))
+    if manager is not None:
+        manager.wait()
+    return ITEResult(
+        state, energies, measured_at,
+        _merge_planner_stats(prior_planner_delta,
+                             planner.stats_since(planner_before)),
+        fidelities,
+        guard=active_guard.report if active_guard is not None else None,
+        resumed_from=resumed_from)
 
 
 def ite_statevector(nrow: int, ncol: int, obs: Observable, tau: float,

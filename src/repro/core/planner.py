@@ -34,7 +34,11 @@ behavior — used by ``benchmarks/bench_planner.py`` for A/B timing.
 from __future__ import annotations
 
 import contextlib
-from typing import Dict, List, Sequence, Tuple
+import hashlib
+import json
+import os
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +60,7 @@ _COUNTERS = {
     "path_hits": 0,
     "path_misses": 0,
     "path_uncached": 0,    # path searches with the cache disabled
+    "path_preloaded": 0,   # entries installed by load_path_cache
     "fused_hits": 0,
     "fused_misses": 0,
 }
@@ -68,6 +73,8 @@ def stats() -> Dict[str, int]:
     out["fused_cache_size"] = len(_FUSED_CACHE)
     from repro.core import orthogonalize as _orth
     out.update(_orth.gram_dispatch_stats())
+    from repro.core import runtime_guard as _guard
+    out.update(_guard.global_counters())
     return out
 
 
@@ -87,6 +94,8 @@ def reset_stats() -> None:
         _COUNTERS[k] = 0
     from repro.core import orthogonalize as _orth
     _orth.reset_gram_dispatch_stats()
+    from repro.core import runtime_guard as _guard
+    _guard.reset_global_counters()
 
 
 def clear() -> None:
@@ -177,6 +186,89 @@ def cached_einsum(expr: str, *tensors: jnp.ndarray) -> jnp.ndarray:
     """``jnp.einsum`` along a plan-cached optimal path."""
     path = contraction_path(expr, tuple(tuple(t.shape) for t in tensors))
     return jnp.einsum(expr, *tensors, optimize=path)
+
+
+# --------------------------------------------------------------------------
+# Persistent path cache (warm-starting a restarted replica)
+# --------------------------------------------------------------------------
+#
+# The path cache is pure data — (expr, shapes) -> a list of pairwise
+# contraction steps — so unlike the fused cache (compiled executables,
+# process-bound) it survives serialization.  A restarted replica preloads
+# the file and replays an identical workload with zero path-search misses;
+# the jit compiles still happen, but the opt_einsum dp searches (the
+# dominant single-thread cost of a cold full-update start) do not.
+#
+# The file is JSON with a sha256 checksum over the canonicalized entries.
+# Loading is load-or-ignore: any corruption — truncation, checksum
+# mismatch, an unknown format version, plain bad JSON — degrades to a cold
+# start with a RuntimeWarning, never a crash.  Entries are validated
+# structurally (a path step is a tuple of operand indices) before install.
+
+PATH_CACHE_FORMAT = 1
+
+
+def _path_entries_canonical(entries: list) -> str:
+    return json.dumps(entries, sort_keys=True, separators=(",", ":"))
+
+
+def save_path_cache(path: str) -> int:
+    """Serialize the in-memory path cache to ``path`` (atomic write).
+
+    Returns the number of entries written."""
+    entries = sorted(
+        [expr, [list(s) for s in shapes], [list(step) for step in plan]]
+        for (expr, shapes), plan in _PATH_CACHE.items()
+    )
+    payload = {
+        "format": PATH_CACHE_FORMAT,
+        "checksum": hashlib.sha256(
+            _path_entries_canonical(entries).encode()).hexdigest(),
+        "entries": entries,
+    }
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+    return len(entries)
+
+
+def load_path_cache(path: str) -> int:
+    """Preload contraction paths from ``path`` into the in-memory cache.
+
+    Returns the number of entries installed (0 on a missing/corrupt/stale
+    file — cold start with a RuntimeWarning, never an exception).  Installed
+    entries tick ``path_preloaded``; subsequent lookups count as hits, so a
+    fully warm-started workload shows ``path_misses == 0``."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if payload["format"] != PATH_CACHE_FORMAT:
+            raise ValueError(f"unknown path-cache format {payload['format']!r}")
+        entries = payload["entries"]
+        digest = hashlib.sha256(
+            _path_entries_canonical(entries).encode()).hexdigest()
+        if digest != payload["checksum"]:
+            raise ValueError("path-cache checksum mismatch")
+        installed = 0
+        staged = {}
+        for expr, shapes, plan in entries:
+            if not isinstance(expr, str):
+                raise ValueError("path-cache entry: expr must be a string")
+            key = (expr, tuple(tuple(int(d) for d in s) for s in shapes))
+            staged[key] = [tuple(int(i) for i in step) for step in plan]
+            installed += 1
+    except FileNotFoundError:
+        return 0
+    except (OSError, ValueError, KeyError, TypeError,
+            json.JSONDecodeError) as e:
+        warnings.warn(
+            f"ignoring unusable planner path cache {path!r} ({e!r}): "
+            f"cold start", RuntimeWarning)
+        return 0
+    _PATH_CACHE.update(staged)
+    _COUNTERS["path_preloaded"] += installed
+    return installed
 
 
 _INT_LABELS = "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ"

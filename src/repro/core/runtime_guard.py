@@ -1,0 +1,416 @@
+"""Numerical health checks with graceful degradation (the runtime guard).
+
+A multi-hour ITE sweep or VQE optimization dies in one of a few well-known
+ways: a randomized SVD degenerates on an ill-conditioned implicit operator
+(Halko et al. arXiv:0909.4061 — the power iteration amplifies garbage when
+the sketch loses rank), a mixed-precision solve underflows the f32 Gram
+clamp, a Pallas kernel crashes on one device, or a boundary row collapses
+to exact zero.  Without a guard the failure surfaces steps later as a NaN
+energy — or worse, never surfaces and the run silently returns garbage.
+
+This module wraps the library's single truncation seam
+(:func:`repro.core.einsumsvd.einsumsvd` routes every solve through
+:func:`guarded_solve`) with a **detect -> escalate -> retry** loop:
+
+* **Detection** — after each solve the factors are checked for NaN/Inf
+  (``check_finite``) and spectrum collapse (``norm_floor``: the largest
+  singular value at or below the floor means the boundary row lost all
+  weight).  Exceptions from the solve (kernel faults, compile failures)
+  are failures too.  :mod:`repro.core.full_update` additionally checks the
+  ALS output and the bond truncation fidelity against ``fidelity_floor``.
+* **Escalation ladder** — the retry replays the *same* solve (same
+  operands, same key) on a strictly more conservative configuration, one
+  rung per attempt, cumulative:
+
+  1. ``exact_svd``   — RandomizedSVD -> DirectSVD (deterministic LAPACK
+     path; no sketch, no power iteration to go wrong);
+  2. ``exact_precision`` — a mixed-policy wrapper is removed, so the solve
+     runs in the operand's full storage dtype;
+  3. ``dense_kernel`` — every kernel-dispatch site is forced dense for the
+     retry (``repro.kernels.dispatch.forced_dense``).
+
+  When the failure was an *exception* (kernel faults raise; numerical
+  garbage doesn't) the ``dense_kernel`` rung is tried first — the crash
+  almost certainly came from a kernel, and falling back to dense keeps the
+  cheaper randomized solver.
+* **Bounded retries** — ``max_retries`` caps the ladder.  An exhausted
+  ladder raises :class:`GuardExhaustedError` (structured: site, cause,
+  attempts, the event trail) — the guard *never* lets NaN escape as a
+  result.
+
+Every detection and recovery ticks process-global counters (surfaced
+through ``planner.stats()`` next to the cache and dispatch counters) and
+appends a :class:`GuardEvent` to the active guard's :class:`GuardReport`,
+which ``ite_run`` / ``run_vqe`` attach to their results.
+
+The guard is opt-in (``ite_run(..., guard=True)`` or a
+:class:`GuardConfig`): with no guard active, :func:`guarded_solve` adds
+one dict lookup to the hot path and failures propagate exactly as before.
+Fault injection (:mod:`repro.core.faults`) makes every rung of the ladder
+deterministically testable on CPU; the recovery contract is measured in
+``tests/test_runtime_guard.py`` against the ``core/precision.py`` budgets.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults
+
+# ---------------------------------------------------------------------------
+# Process-global counters (merged into planner.stats())
+# ---------------------------------------------------------------------------
+
+_COUNTERS: Dict[str, int] = {
+    "guard_nan_events": 0,         # NaN/Inf detected in a solve's factors
+    "guard_collapse_events": 0,    # spectrum collapsed below norm_floor
+    "guard_exception_events": 0,   # the solve raised (kernel fault, ...)
+    "guard_fidelity_events": 0,    # full-update fidelity below the floor
+    "guard_retries": 0,            # total retry attempts
+    "guard_rung_exact_svd": 0,
+    "guard_rung_exact_precision": 0,
+    "guard_rung_dense_kernel": 0,
+    "guard_recovered": 0,          # failures that a ladder rung fixed
+    "guard_degraded_accepted": 0,  # fidelity floor missed, run continued
+    "guard_exhausted": 0,          # ladders that ran out -> structured raise
+}
+
+
+def global_counters() -> Dict[str, int]:
+    """Process-global guard counters (a copy; planner.stats() merges these)."""
+    return dict(_COUNTERS)
+
+
+def reset_global_counters() -> None:
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# Config / report structures
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """What the guard checks and how far it escalates.
+
+    ``max_retries``     caps ladder attempts per failing unit.
+    ``check_finite``    NaN/Inf detection on every guarded solve.
+    ``norm_floor``      collapse threshold: largest singular value <= floor
+                        counts as a failure (0.0 = only exact zero).
+    ``fidelity_floor``  full update only: bond truncation fidelity below
+                        this retries the bond with an exact seed (0.0 = off).
+    ``fidelity_strict`` raise when the fidelity floor is still missed after
+                        the retry; default records + warns and continues
+                        (a low fidelity is degraded accuracy, not
+                        corruption — unlike NaN it is a judgement call).
+    """
+    max_retries: int = 3
+    check_finite: bool = True
+    norm_floor: float = 0.0
+    fidelity_floor: float = 0.0
+    fidelity_strict: bool = False
+
+
+@dataclasses.dataclass
+class GuardEvent:
+    """One detection or recovery, in causal order."""
+    site: str       # "einsumsvd" | "full_update"
+    cause: str      # "nan" | "collapse" | "exception" | "fidelity"
+    attempt: int    # 0 = initial detection, 1.. = retry attempts
+    action: str     # "detected" | "retry:<rung>" | "recovered:<rung>"
+                    # | "degraded_accepted" | "exhausted"
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """The structured trail a guarded run attaches to its result."""
+    events: List[GuardEvent] = dataclasses.field(default_factory=list)
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def record(self, event: GuardEvent) -> None:
+        self.events.append(event)
+
+    def tick(self, counter: str) -> None:
+        _COUNTERS[counter] += 1
+        self.counters[counter] = self.counters.get(counter, 0) + 1
+
+    @property
+    def ok(self) -> bool:
+        """No failure was left unrecovered (degraded-accepted still counts
+        as ok — the result is finite, only less accurate than asked)."""
+        return not any(e.action == "exhausted" for e in self.events)
+
+    def causes(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            if e.attempt == 0:
+                out[e.cause] = out.get(e.cause, 0) + 1
+        return out
+
+
+class GuardExhaustedError(RuntimeError):
+    """The escalation ladder ran out without producing a healthy result.
+
+    Structured: ``site``/``cause``/``attempts`` plus the event trail, so a
+    service can log exactly which unit failed and what was tried — instead
+    of propagating NaN into a caller-visible energy."""
+
+    def __init__(self, site: str, cause: str, attempts: int,
+                 events: List[GuardEvent]):
+        rungs = [e.action for e in events if e.action.startswith("retry:")]
+        super().__init__(
+            f"runtime guard exhausted at site {site!r}: cause={cause!r} "
+            f"survived {attempts} escalation attempts ({', '.join(rungs)})")
+        self.site = site
+        self.cause = cause
+        self.attempts = attempts
+        self.events = events
+
+
+# ---------------------------------------------------------------------------
+# The active-guard stack
+# ---------------------------------------------------------------------------
+
+_STACK: List["RuntimeGuard"] = []
+
+
+class RuntimeGuard:
+    """An activated guard: config + report, installed via ``with``."""
+
+    def __init__(self, config: Optional[GuardConfig] = None):
+        self.config = config or GuardConfig()
+        self.report = GuardReport()
+
+    def __enter__(self) -> "RuntimeGuard":
+        _STACK.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _STACK.remove(self)
+
+
+def current() -> Optional[RuntimeGuard]:
+    """The innermost active guard, or None (the unguarded fast path)."""
+    return _STACK[-1] if _STACK else None
+
+
+def resolve(guard) -> Optional[RuntimeGuard]:
+    """Normalize the ``guard=`` argument of ite_run/run_vqe.
+
+    ``None``/``False`` -> no guard; ``True`` -> defaults; a
+    :class:`GuardConfig` or :class:`RuntimeGuard` is used as-is."""
+    if guard is None or guard is False:
+        return None
+    if guard is True:
+        return RuntimeGuard(GuardConfig())
+    if isinstance(guard, GuardConfig):
+        return RuntimeGuard(guard)
+    if isinstance(guard, RuntimeGuard):
+        return guard
+    raise TypeError(
+        f"guard must be None/bool/GuardConfig/RuntimeGuard, got {guard!r}")
+
+
+# ---------------------------------------------------------------------------
+# Failure detection
+# ---------------------------------------------------------------------------
+
+def _corrupt(s: jnp.ndarray, action: str) -> jnp.ndarray:
+    """Apply an injected einsumsvd.result corruption to the spectrum."""
+    if action == "nan":
+        return s * jnp.nan
+    if action == "inf":
+        return s * jnp.inf
+    if action == "zero":
+        return jnp.zeros_like(s)
+    raise ValueError(f"unknown einsumsvd.result fault action {action!r}")
+
+
+def _detect_svd(config: GuardConfig, u, s, v) -> Optional[str]:
+    """One host sync: NaN/Inf anywhere in the factors, or collapsed s."""
+    if not config.check_finite:
+        return None
+    bad = ((~jnp.isfinite(s)).any() | (~jnp.isfinite(u)).any()
+           | (~jnp.isfinite(v)).any())
+    smax = jnp.max(jnp.abs(s))
+    flags = np.asarray(jnp.stack([bad.astype(jnp.float32),
+                                  smax.astype(jnp.float32)]))
+    if flags[0]:
+        return "nan"
+    if not np.isfinite(flags[1]) or flags[1] <= config.norm_floor:
+        return "collapse"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# The escalation ladder
+# ---------------------------------------------------------------------------
+
+def _ladder(option, exception_first: bool) -> List[Tuple[str, object, bool]]:
+    """Cumulative ``(rung_name, svd_option, force_dense)`` escalation steps.
+
+    Each rung keeps every previous rung's downgrade: the precision unwrap
+    retries with the exact SVD *and* full precision; the dense rung adds
+    forced-dense kernels on top of both."""
+    from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+    from repro.core.precision import PrecisionWrapped
+
+    rungs: List[Tuple[str, object, bool]] = []
+    cur = option
+    base = cur.inner if isinstance(cur, PrecisionWrapped) else cur
+    if isinstance(base, RandomizedSVD):
+        exact = DirectSVD(cutoff=base.cutoff)
+        cur = (PrecisionWrapped(exact, cur.policy)
+               if isinstance(cur, PrecisionWrapped) else exact)
+        rungs.append(("exact_svd", cur, False))
+    if isinstance(cur, PrecisionWrapped):
+        cur = cur.inner
+        rungs.append(("exact_precision", cur, False))
+    rungs.append(("dense_kernel", cur, True))
+    if exception_first:
+        # A raising solve is a kernel/compile problem, not a numerical one:
+        # fall back to dense first and keep the cheaper solver if that heals.
+        rungs.insert(0, ("dense_kernel", option, True))
+    return rungs
+
+
+def _run_solve(option, op, rank, key, force_dense: bool):
+    from repro.kernels import dispatch
+    if force_dense:
+        with dispatch.forced_dense():
+            return option(op, rank, key)
+    return option(op, rank, key)
+
+
+def guarded_solve(option, op, rank: int, key=None):
+    """Run an einsumsvd option under the active guard (the library seam).
+
+    With no guard active this is ``option(op, rank, key)`` plus the
+    ``einsumsvd.result`` fault hook (so tests can show the *unguarded*
+    behavior: corruption propagates).  With a guard: detect, escalate,
+    retry — see the module docstring."""
+    guard = current()
+    spec = faults.should_fire("einsumsvd.result")
+    err = None
+    try:
+        u, s, v = _run_solve(option, op, rank, key, False)
+        if spec is not None:
+            s = _corrupt(s, spec.action)
+        if guard is None:
+            return u, s, v
+        cause = _detect_svd(guard.config, u, s, v)
+    except Exception as e:  # noqa: BLE001 — every solve failure is guardable
+        if guard is None:
+            raise
+        err = e
+        cause = "exception"
+    if cause is None:
+        return u, s, v
+
+    config, report = guard.config, guard.report
+    report.tick(f"guard_{cause}_events")
+    report.record(GuardEvent("einsumsvd", cause, 0, "detected",
+                             detail=repr(err) if err else ""))
+    rungs = _ladder(option, exception_first=(cause == "exception"))
+    attempts = 0
+    for rung, opt, force_dense in rungs[:config.max_retries]:
+        attempts += 1
+        report.tick("guard_retries")
+        report.tick(f"guard_rung_{rung}")
+        report.record(GuardEvent("einsumsvd", cause, attempts,
+                                 f"retry:{rung}"))
+        retry_spec = faults.should_fire("einsumsvd.result")
+        try:
+            u, s, v = _run_solve(opt, op, rank, key, force_dense)
+            if retry_spec is not None:
+                s = _corrupt(s, retry_spec.action)
+            recheck = _detect_svd(config, u, s, v)
+        except Exception as e:  # noqa: BLE001
+            err = e
+            recheck = "exception"
+        if recheck is None:
+            report.tick("guard_recovered")
+            report.record(GuardEvent("einsumsvd", cause, attempts,
+                                     f"recovered:{rung}"))
+            return u, s, v
+        cause = recheck
+    report.tick("guard_exhausted")
+    report.record(GuardEvent("einsumsvd", cause, attempts, "exhausted",
+                             detail=repr(err) if err else ""))
+    raise GuardExhaustedError("einsumsvd", cause, attempts,
+                              list(report.events))
+
+
+# ---------------------------------------------------------------------------
+# Full-update bond guard (called from repro.core.full_update)
+# ---------------------------------------------------------------------------
+
+def check_bond(guard: RuntimeGuard, ar, br, fid) -> Optional[str]:
+    """Failure cause of a full-update ALS result, or None when healthy.
+
+    ``"nan"`` when the optimized pair is non-finite, ``"fidelity"`` when
+    the bond truncation fidelity misses the configured floor (NaN fidelity
+    counts — it means the metric itself degenerated)."""
+    config = guard.config
+    if config.check_finite:
+        bad = ((~jnp.isfinite(ar)).any() | (~jnp.isfinite(br)).any())
+        if bool(np.asarray(bad)):
+            return "nan"
+    if config.fidelity_floor > 0.0:
+        f = float(np.asarray(jnp.real(fid)))
+        if not f >= config.fidelity_floor:   # NaN compares False -> fails
+            return "fidelity"
+    return None
+
+
+def bond_failure(guard: RuntimeGuard, cause: str, retried: bool,
+                 detail: str = "") -> None:
+    """Record the outcome of a full-update bond failure.
+
+    First detection (``retried=False``) ticks the cause counters; the
+    post-retry call either raises (NaN after an exact retry is exhausted;
+    fidelity raises only under ``fidelity_strict``) or records the bond as
+    degraded-but-accepted."""
+    report = guard.report
+    if not retried:
+        report.tick(f"guard_{cause}_events")
+        report.tick("guard_retries")
+        report.tick("guard_rung_exact_svd")
+        report.record(GuardEvent("full_update", cause, 0, "detected", detail))
+        report.record(GuardEvent("full_update", cause, 1, "retry:exact_svd"))
+        return
+    if cause == "fidelity" and not guard.config.fidelity_strict:
+        report.tick("guard_degraded_accepted")
+        report.record(GuardEvent("full_update", cause, 1,
+                                 "degraded_accepted", detail))
+        warnings.warn(
+            f"full-update bond fidelity below floor after exact retry "
+            f"({detail}); continuing degraded (fidelity_strict=False)",
+            RuntimeWarning)
+        return
+    report.tick("guard_exhausted")
+    report.record(GuardEvent("full_update", cause, 1, "exhausted", detail))
+    raise GuardExhaustedError("full_update", cause, 1, list(report.events))
+
+
+def bond_recovered(guard: RuntimeGuard, cause: str) -> None:
+    guard.report.tick("guard_recovered")
+    guard.report.record(GuardEvent("full_update", cause, 1,
+                                   "recovered:exact_svd"))
+
+
+@contextlib.contextmanager
+def maybe(guard: Optional[RuntimeGuard]):
+    """``with maybe(resolve(guard)):`` — nullcontext when guard is None."""
+    if guard is None:
+        yield None
+    else:
+        with guard:
+            yield guard

@@ -5,16 +5,34 @@ CNOTs on all nearest-neighbour pairs; the optimizer is SLSQP (as in the
 paper, via scipy) over the PEPS-simulated energy
 ``E(theta) = <psi(theta)|H|psi(theta)>``.  An SPSA optimizer is provided as
 a derivative-free alternative.
+
+Production hardening (see ``docs/robustness.md``):
+
+* ``checkpoint_dir=``/``checkpoint_every=`` (in energy *evaluations*)
+  snapshot the optimizer state through
+  :class:`repro.checkpoint.manager.CheckpointManager`.  SPSA resumes
+  **bit-identically**: the checkpoint carries the parameter vector, the
+  iteration index, the history, and the full numpy Generator state (as a
+  JSON leaf), so the perturbation stream continues exactly where the
+  killed run left it.  SLSQP keeps its state inside scipy, so its resume
+  is a documented *warm restart*: the optimizer restarts from the best
+  checkpointed parameters (energies re-converge; the eval trace is not
+  replayed bit-for-bit).
+* ``guard=`` activates the runtime guard over every energy evaluation —
+  each evaluation contracts hundreds of einsumsvd truncations; the
+  structured :class:`GuardReport` lands in ``VQEResult.guard``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planner, runtime_guard
 from repro.core import statevector as sv
 from repro.core.bmps import BMPS
 from repro.core.circuits import apply_circuit_peps, apply_circuit_statevector, vqe_ansatz
@@ -46,6 +64,30 @@ class VQEResult:
     energy: float
     history: List[float]
     n_evals: int
+    # planner cache counters over the run (for a resumed run: summed with
+    # the checkpointed delta of the earlier process — the whole logical run)
+    planner_stats: Optional[dict] = None
+    # runtime-guard report (guard= runs only)
+    guard: Optional[runtime_guard.GuardReport] = None
+    # the checkpoint step (evaluation count) this run resumed from, or None
+    resumed_from: Optional[int] = None
+
+
+def _vqe_snapshot(x: np.ndarray, k: int, history: List[float],
+                  rng: Optional[np.random.Generator],
+                  planner_delta: dict) -> dict:
+    tree = {
+        "x": np.asarray(x, dtype=np.float64),
+        "k": np.asarray(k, dtype=np.int64),
+        "history": np.asarray(history, dtype=np.float64),
+        "meta_json": np.array(json.dumps({"planner_delta": planner_delta})),
+    }
+    if rng is not None:
+        # the full Generator state as JSON: restoring it continues the
+        # SPSA perturbation stream exactly (bit-identical resume)
+        tree["rng_state_json"] = np.array(
+            json.dumps(rng.bit_generator.state))
+    return tree
 
 
 def run_vqe(
@@ -60,6 +102,13 @@ def run_vqe(
     backend: str = "peps",
     method: str = "SLSQP",
     svd: Optional[object] = None,
+    *,
+    guard=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    checkpoint_keep: int = 3,
+    resume: bool = True,
+    callback: Optional[Callable] = None,
 ) -> VQEResult:
     """Minimize the PEPS-simulated (or statevector) energy over the ansatz.
 
@@ -69,6 +118,12 @@ def run_vqe(
     (e.g. ``RandomizedSVD()`` for the fused implicit path — every energy
     evaluation replays the same network signatures, so the planner cache
     amortizes compilation across the whole optimization); default DirectSVD.
+
+    ``guard`` activates the runtime guard (see module docstring);
+    ``checkpoint_dir`` + ``checkpoint_every=N`` (counted in energy
+    evaluations) snapshot the optimizer state, and ``resume=True`` picks up
+    from the latest checkpoint (SPSA bit-identical, SLSQP warm restart).
+    ``callback(n_evals, energy, x)`` fires after every evaluation.
     """
     from scipy import optimize
 
@@ -76,6 +131,8 @@ def run_vqe(
     rng = np.random.default_rng(seed)
     x0 = rng.uniform(-0.1, 0.1, size=n_layers * n)
     history: List[float] = []
+    planner_before = planner.stats()
+    prior_planner_delta: dict = {}
     chi = contract_bond or max(2 * max_bond, 4)
     if svd is None:
         update = QRUpdate(rank=max_bond)
@@ -84,28 +141,90 @@ def run_vqe(
         update = QRUpdate(rank=max_bond, svd=svd)
         contract = BMPS(chi, svd=svd)
 
+    is_spsa = method.lower() == "spsa"
+    manager = None
+    resumed_from = None
+    start_k = 0
+    if checkpoint_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        latest = manager.latest_step() if resume else None
+        if latest is not None:
+            flat = manager.load(latest)
+            x0 = np.asarray(flat["x"], dtype=np.float64)
+            start_k = int(flat["k"])
+            history = [float(e) for e in flat["history"]]
+            meta = json.loads(str(flat["meta_json"][()]))
+            prior_planner_delta = meta.get("planner_delta") or {}
+            if "rng_state_json" in flat:
+                rng.bit_generator.state = json.loads(
+                    str(flat["rng_state_json"][()]))
+            resumed_from = latest
+
+    def current_delta() -> dict:
+        now = planner.stats_since(planner_before)
+        out = dict(now)
+        for pk, pv in prior_planner_delta.items():
+            if pk.endswith("_cache_size"):
+                continue
+            out[pk] = out.get(pk, 0) + pv
+        return out
+
     def objective(x):
         if backend == "peps":
             e = vqe_energy_peps(x, nrow, ncol, obs, update, contract)
         else:
             e = vqe_energy_statevector(x, nrow, ncol, obs)
         history.append(e)
+        if callback is not None:
+            callback(len(history), e, np.asarray(x))
         return e
 
-    if method.lower() == "spsa":
-        x = x0.copy()
-        a0, c0 = 0.15, 0.12
-        for k in range(maxiter):
-            ak = a0 / (1 + k) ** 0.602
-            ck = c0 / (1 + k) ** 0.101
-            delta = rng.choice([-1.0, 1.0], size=x.shape)
-            gplus = objective(x + ck * delta)
-            gminus = objective(x - ck * delta)
-            ghat = (gplus - gminus) / (2 * ck) * delta
-            x = x - ak * ghat
-        e = objective(x)
-        return VQEResult(x, e, history, len(history))
+    active_guard = runtime_guard.resolve(guard)
 
-    res = optimize.minimize(objective, x0, method=method,
-                            options={"maxiter": maxiter, "ftol": 1e-9})
-    return VQEResult(res.x, float(res.fun), history, len(history))
+    def finish(x, e) -> VQEResult:
+        if manager is not None:
+            manager.wait()
+        return VQEResult(
+            np.asarray(x), float(e), history, len(history),
+            planner_stats=current_delta(),
+            guard=(active_guard.report if active_guard is not None else None),
+            resumed_from=resumed_from)
+
+    with runtime_guard.maybe(active_guard):
+        if is_spsa:
+            x = x0.copy()
+            a0, c0 = 0.15, 0.12
+            for k in range(start_k, maxiter):
+                ak = a0 / (1 + k) ** 0.602
+                ck = c0 / (1 + k) ** 0.101
+                delta = rng.choice([-1.0, 1.0], size=x.shape)
+                gplus = objective(x + ck * delta)
+                gminus = objective(x - ck * delta)
+                ghat = (gplus - gminus) / (2 * ck) * delta
+                x = x - ak * ghat
+                if manager is not None and checkpoint_every > 0 \
+                        and (k + 1) % checkpoint_every == 0:
+                    # saved AFTER iteration k: resume continues at k+1 with
+                    # the Generator mid-stream -> bit-identical trajectory
+                    manager.save(k + 1, _vqe_snapshot(
+                        x, k + 1, history, rng, current_delta()))
+            e = objective(x)
+            return finish(x, e)
+
+        evals_at_save = [len(history)]
+
+        def slsqp_checkpoint(x):
+            # scipy owns SLSQP's internal state, so the snapshot carries
+            # only (x, history): resume is a warm restart, not a replay
+            if manager is not None and checkpoint_every > 0 \
+                    and len(history) - evals_at_save[0] >= checkpoint_every:
+                evals_at_save[0] = len(history)
+                manager.save(len(history), _vqe_snapshot(
+                    x, len(history), history, None, current_delta()))
+
+        res = optimize.minimize(
+            objective, x0, method=method,
+            callback=slsqp_checkpoint if manager is not None else None,
+            options={"maxiter": maxiter, "ftol": 1e-9})
+        return finish(res.x, float(res.fun))

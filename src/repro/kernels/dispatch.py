@@ -52,12 +52,15 @@ variable (``1``/``interpret`` or ``0``/``compiled``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import faults
 
 _MODES = ("auto", "pallas", "dense")
 
@@ -113,6 +116,12 @@ def dispatch(name: str, *args, **kwargs):
     if mode != "dense" and site.supported(*args, **kwargs):
         use_pallas = mode == "pallas" or site.auto(*args, **kwargs)
     if use_pallas:
+        # Deterministic fault injection (tests of the runtime-guard dense
+        # fallback).  Fires at Python dispatch time — i.e. while *tracing*
+        # a fused solver, the same tick semantics as the counters below —
+        # which models a kernel that fails to lower/compile on a device.
+        if faults.should_fire(f"kernel.{name}") is not None:
+            raise faults.InjectedFault(f"kernel.{name}")
         _COUNTERS[f"pallas_{name}_calls"] += 1
         return site.pallas_fn(*args, **kwargs)
     _COUNTERS[f"dense_{name}_calls"] += 1
@@ -146,6 +155,24 @@ def kernel_backend(site: Optional[str] = None) -> str:
     if site is not None:
         return _SITE_MODES.get(site, _STATE["mode"])
     return _STATE["mode"]
+
+
+@contextlib.contextmanager
+def forced_dense():
+    """Force every site dense for the duration (the runtime guard's
+    ``dense_kernel`` escalation rung).  Saves and restores both the global
+    mode and the per-site overrides, so a per-site ``'pallas'`` pin set by
+    a test or a tuning run survives the guarded retry."""
+    prev_mode = _STATE["mode"]
+    prev_sites = dict(_SITE_MODES)
+    _STATE["mode"] = "dense"
+    _SITE_MODES.clear()
+    try:
+        yield
+    finally:
+        _STATE["mode"] = prev_mode
+        _SITE_MODES.clear()
+        _SITE_MODES.update(prev_sites)
 
 
 def set_kernel_compute(dtype) -> Optional[str]:

@@ -1,0 +1,156 @@
+"""CheckpointManager: dtype fidelity (complex! — PEPS tensors), torn-write
+atomicity under fault injection, orphan sweeping, GC retention, and the
+restore/load error paths."""
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import faults
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import QRUpdate, computational_zeros
+from repro.core.bmps import BMPS
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _tree():
+    return {
+        "c128": np.array([[1 + 2j, -3.5 - 4j]], dtype=np.complex128),
+        "c64": np.array([0.5 + 0.25j], dtype=np.complex64),
+        "f64": np.linspace(0, 1, 5),
+        "i64": np.arange(4),
+        "meta": np.array(json.dumps({"step": 7})),
+    }
+
+
+class TestDtypeFidelity:
+    def test_complex_round_trips_bit_identically(self, tmp_path):
+        """The seed widened every non-fiub kind to float32 — silently
+        dropping the imaginary part of complex PEPS tensors.  Complex is
+        numpy-native; it must round-trip exactly."""
+        m = CheckpointManager(tmp_path)
+        m.save(1, _tree(), blocking=True)
+        out = m.load(1)
+        for k in ("c128", "c64", "f64", "i64"):
+            assert out[k].dtype == _tree()[k].dtype, k
+            assert np.array_equal(out[k], _tree()[k]), k
+        assert str(out["meta"][()]) == json.dumps({"step": 7})
+
+    def test_complex_peps_state_round_trips(self, tmp_path):
+        """An evolved (c128) PEPS snapshot restores with a nonzero
+        imaginary part intact."""
+        from repro.core.ite import ite_run
+        st = computational_zeros(2, 2)
+        res = ite_run(st, tfi_hamiltonian(2, 2), 0.05, 2, QRUpdate(rank=2),
+                      BMPS(8), measure_every=1,
+                      key=jax.random.PRNGKey(5))
+        tree = {f"s{i}{j}": res.state.sites[i][j]
+                for i in range(2) for j in range(2)}
+        m = CheckpointManager(tmp_path)
+        m.save(3, tree, blocking=True)
+        out = m.load(3)
+        for k, v in tree.items():
+            got = out[k]
+            assert got.dtype == np.complex128
+            assert np.array_equal(got, np.asarray(v)), k
+
+    def test_ml_dtypes_still_widen_and_narrow_back(self, tmp_path):
+        ml_dtypes = pytest.importorskip("ml_dtypes")
+        bf = np.array([1.5, -2.25, 3.0], dtype=ml_dtypes.bfloat16)
+        m = CheckpointManager(tmp_path)
+        m.save(1, {"w": bf}, blocking=True)
+        # on disk: widened float32 (raw .npy of kind-V dtypes is unreadable)
+        raw = np.load(tmp_path / "step_00000001" / "w.npy")
+        assert raw.dtype == np.float32
+        out = m.load(1)["w"]
+        assert out.dtype == ml_dtypes.bfloat16
+        assert np.array_equal(out.astype(np.float32), bf.astype(np.float32))
+
+    def test_restore_rebuilds_the_target_tree(self, tmp_path):
+        m = CheckpointManager(tmp_path)
+        tree = {"a": np.arange(3.0), "b": np.array([1 + 1j], np.complex128)}
+        m.save(1, tree, blocking=True)
+        out = m.restore(1, {"a": np.zeros(3), "b": np.zeros(1, np.complex128)})
+        assert np.array_equal(np.asarray(out["a"]), tree["a"])
+        assert np.array_equal(np.asarray(out["b"]), tree["b"])
+
+
+class TestAtomicity:
+    def test_torn_write_never_shadows_previous_step(self, tmp_path):
+        """A kill mid-write (injected: partial tmp, no publish) leaves the
+        previous good step as latest."""
+        m = CheckpointManager(tmp_path)
+        m.save(1, _tree(), blocking=True)
+        with faults.armed("checkpoint.write", action="torn"):
+            m.save(2, _tree(), blocking=True)
+        assert m.latest_step() == 1
+        assert (tmp_path / "step_00000002.tmp").exists()
+        out = m.load(1)   # previous step is fully readable
+        assert np.array_equal(out["c128"], _tree()["c128"])
+
+    def test_torn_final_manifest_is_skipped(self, tmp_path):
+        """A published directory with a truncated manifest (injected:
+        non-atomic publish) is invisible to all_steps/latest_step."""
+        m = CheckpointManager(tmp_path)
+        m.save(1, _tree(), blocking=True)
+        with faults.armed("checkpoint.write", action="torn_final"):
+            m.save(2, _tree(), blocking=True)
+        assert (tmp_path / "step_00000002" / "manifest.json").exists()
+        assert m.all_steps() == [1]
+
+    def test_init_sweeps_orphaned_tmp_dirs(self, tmp_path):
+        m = CheckpointManager(tmp_path)
+        with faults.armed("checkpoint.write", action="torn"):
+            m.save(5, _tree(), blocking=True)
+        orphan = tmp_path / "step_00000005.tmp"
+        assert orphan.exists()
+        CheckpointManager(tmp_path)    # a fresh manager (new process) sweeps
+        assert not orphan.exists()
+
+    def test_async_save_then_wait_is_durable(self, tmp_path):
+        m = CheckpointManager(tmp_path)
+        m.save(4, _tree(), blocking=False)
+        m.wait()
+        assert m.latest_step() == 4
+
+
+class TestGCAndErrors:
+    def test_gc_keeps_the_newest_n(self, tmp_path):
+        m = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3, 4, 5):
+            m.save(s, _tree(), blocking=True)
+        assert m.all_steps() == [4, 5]
+
+    def test_interleaved_saves_retain_by_step_order(self, tmp_path):
+        m = CheckpointManager(tmp_path, keep=3)
+        for s in (10, 2, 30, 4):
+            m.save(s, _tree(), blocking=True)
+        assert m.all_steps() == [4, 10, 30]
+
+    def test_missing_step_raises_a_clear_error(self, tmp_path):
+        m = CheckpointManager(tmp_path)
+        m.save(1, _tree(), blocking=True)
+        with pytest.raises(FileNotFoundError, match=r"step 99.*available"):
+            m.load(99)
+        with pytest.raises(FileNotFoundError, match=r"step 99"):
+            m.restore(99, {"a": np.zeros(1)})
+
+    def test_leaf_mismatch_messages(self, tmp_path):
+        m = CheckpointManager(tmp_path)
+        m.save(1, {"a": np.zeros(3)}, blocking=True)
+        with pytest.raises(KeyError, match="not in target tree"):
+            m.restore(1, {"b": np.zeros(3)})
+        with pytest.raises(ValueError, match="shape"):
+            m.restore(1, {"a": np.zeros(4)})
+        m.save(2, {"a": np.zeros(3)}, blocking=True)
+        with pytest.raises(KeyError, match="missing leaves"):
+            m.restore(2, {"a": np.zeros(3), "extra": np.zeros(1)})

@@ -1,0 +1,344 @@
+"""Checkpoint + resume for the physics runs (ITE / VQE).
+
+The contract under test (docs/robustness.md): a run killed mid-evolution,
+re-invoked with the same arguments and checkpoint directory, resumes from
+the latest published checkpoint and reproduces the uninterrupted run's
+per-step energies bit-identically (<= 1e-12) on the overlapping steps —
+including with the randomized (key-consuming) einsumsvd engine, which is
+the hard case: the snapshot must preserve the PRNG key stream, the cached
+environments, and the refresh counter exactly.
+
+Fast tests kill in-process (an exception from the measurement callback);
+the slow chaos tests kill a real subprocess with ``os._exit(42)`` and
+resume in a second process, mirroring tests/test_fault_tolerance.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.bmps import BMPS
+from repro.core.einsumsvd import RandomizedSVD
+from repro.core.ite import ite_run
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import FullUpdate, QRUpdate, computational_zeros
+from repro.core.vqe import run_vqe
+
+REPO = Path(__file__).resolve().parent.parent
+ENV = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+
+OBS = tfi_hamiltonian(2, 2)
+TOL = 1e-12
+
+
+def _by_step(result):
+    return dict(zip(result.steps, result.energies))
+
+
+def _assert_overlap_identical(ref, got, tol=TOL):
+    common = set(ref) & set(got)
+    assert common, (sorted(ref), sorted(got))
+    for s in sorted(common):
+        assert abs(ref[s] - got[s]) <= tol, (s, ref[s], got[s])
+
+
+class _Kill(Exception):
+    pass
+
+
+def _killer(at_step):
+    def cb(step, e, state):
+        if step >= at_step:
+            raise _Kill(step)
+    return cb
+
+
+def _wait_for_checkpoint(ckdir, timeout=10.0):
+    """The async writer may still be in flight when an in-process kill
+    unwinds; published checkpoints appear shortly after.  (Read-only glob —
+    constructing a CheckpointManager here would sweep the in-flight tmp.)"""
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if any(p.suffix != ".tmp" and (p / "manifest.json").exists()
+               for p in Path(ckdir).glob("step_*")):
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"no checkpoint appeared in {ckdir}")
+
+
+# ---------------------------------------------------------------------------
+# In-process resume (fast)
+# ---------------------------------------------------------------------------
+
+class TestITEResume:
+    def test_qr_update_resume_bit_identical(self, tmp_path):
+        upd, contract = QRUpdate(rank=2), BMPS(8)
+        ref = ite_run(computational_zeros(2, 2), OBS, 0.05, 6, upd, contract,
+                      measure_every=2)
+        with pytest.raises(_Kill):
+            ite_run(computational_zeros(2, 2), OBS, 0.05, 6, upd, contract,
+                    measure_every=2, callback=_killer(4),
+                    checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        _wait_for_checkpoint(tmp_path)
+        res = ite_run(computational_zeros(2, 2), OBS, 0.05, 6, upd, contract,
+                      measure_every=2, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=2)
+        assert res.resumed_from is not None
+        _assert_overlap_identical(_by_step(ref), _by_step(res))
+        assert set(_by_step(res)) == set(_by_step(ref))
+
+    def test_randomized_svd_resume_preserves_key_stream(self, tmp_path):
+        """The hard case: every truncation consumes PRNG splits, so any
+        extra/missing split after resume diverges every later energy."""
+        svd = RandomizedSVD(niter=2, oversample=4)
+        upd, contract = QRUpdate(rank=2, svd=svd), BMPS(8, svd=svd)
+        args = (computational_zeros(2, 2), OBS, 0.05, 6, upd, contract)
+        ref = ite_run(*args, measure_every=2)
+        with pytest.raises(_Kill):
+            ite_run(*args, measure_every=2, callback=_killer(4),
+                    checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        _wait_for_checkpoint(tmp_path)
+        res = ite_run(*args, measure_every=2, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=2)
+        assert res.resumed_from is not None
+        _assert_overlap_identical(_by_step(ref), _by_step(res))
+
+    def test_full_update_resume_with_envs_and_fidelity_window(self, tmp_path):
+        """FullUpdate carries extra loop state — cached row environments,
+        the refresh counter, the undrained fidelity window — all of which
+        must survive the round trip for bit-identity."""
+        upd = FullUpdate(rank=2, chi=8, env_refresh_every=3)
+        contract = BMPS(8)
+        args = (computational_zeros(2, 2), OBS, 0.05, 6, upd, contract)
+        ref = ite_run(*args, measure_every=2)
+        with pytest.raises(_Kill):
+            ite_run(*args, measure_every=2, callback=_killer(4),
+                    checkpoint_dir=str(tmp_path), checkpoint_every=3)
+        _wait_for_checkpoint(tmp_path)
+        res = ite_run(*args, measure_every=2, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=3)
+        assert res.resumed_from is not None
+        _assert_overlap_identical(_by_step(ref), _by_step(res))
+        ref_f = dict(zip(ref.steps, ref.fidelities))
+        got_f = dict(zip(res.steps, res.fidelities))
+        _assert_overlap_identical(ref_f, got_f)
+
+    def test_planner_stats_cover_the_whole_logical_run(self, tmp_path):
+        upd, contract = QRUpdate(rank=2), BMPS(8)
+        args = (computational_zeros(2, 2), OBS, 0.05, 6, upd, contract)
+        with pytest.raises(_Kill):
+            ite_run(*args, measure_every=2, callback=_killer(4),
+                    checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        _wait_for_checkpoint(tmp_path)
+        res = ite_run(*args, measure_every=2, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=2)
+        ref = ite_run(*args, measure_every=2)
+        # the merged counters count at least the uninterrupted run's work
+        assert res.planner_stats["path_hits"] >= ref.planner_stats["path_hits"]
+
+    def test_resume_false_starts_fresh(self, tmp_path):
+        upd, contract = QRUpdate(rank=2), BMPS(8)
+        args = (computational_zeros(2, 2), OBS, 0.05, 3, upd, contract)
+        ite_run(*args, measure_every=1, checkpoint_dir=str(tmp_path),
+                checkpoint_every=1)
+        res = ite_run(*args, measure_every=1, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=1, resume=False)
+        assert res.resumed_from is None
+        assert len(res.energies) == 3
+
+
+class TestVQEResume:
+    def test_spsa_resume_bit_identical(self, tmp_path):
+        kw = dict(n_layers=1, max_bond=2, seed=3, method="spsa")
+        ref = run_vqe(2, 2, OBS, maxiter=6, **kw)
+        run_vqe(2, 2, OBS, maxiter=3, **kw,
+                checkpoint_dir=str(tmp_path), checkpoint_every=1)
+        res = run_vqe(2, 2, OBS, maxiter=6, **kw,
+                      checkpoint_dir=str(tmp_path), checkpoint_every=1)
+        assert res.resumed_from is not None
+        # full trajectory: history, parameters and final energy all match
+        # exactly — the checkpointed Generator state continues the SPSA
+        # perturbation stream where the first process left it
+        assert len(ref.history) == len(res.history)
+        for a, b in zip(ref.history, res.history):
+            assert abs(a - b) <= TOL
+        assert np.max(np.abs(ref.thetas - res.thetas)) <= TOL
+        assert abs(ref.energy - res.energy) <= TOL
+
+    def test_slsqp_warm_restart(self, tmp_path):
+        """SLSQP state lives inside scipy: the documented contract is a
+        warm restart from the checkpointed x, not a bit-identical replay."""
+        kw = dict(n_layers=1, max_bond=2, seed=0, method="SLSQP")
+        r1 = run_vqe(2, 2, OBS, maxiter=4, **kw,
+                     checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        assert r1.resumed_from is None
+        res = run_vqe(2, 2, OBS, maxiter=4, **kw,
+                      checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        assert res.resumed_from is not None
+        assert np.isfinite(res.energy)
+        assert len(res.history) > len(r1.history)  # prior history preserved
+        assert res.energy <= r1.energy + 1e-9      # no regression from warm x
+
+
+# ---------------------------------------------------------------------------
+# Subprocess chaos-kill (slow): a REAL kill via os._exit(42), resume in a
+# second process — async writer genuinely racing the kill
+# ---------------------------------------------------------------------------
+
+ITE_SCRIPT = r"""
+import json, os, sys
+import jax
+from repro.core.bmps import BMPS
+from repro.core.distributed import DistributedBMPS
+from repro.core.einsumsvd import RandomizedSVD
+from repro.core.ite import ite_run
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import QRUpdate, computational_zeros
+
+log, ckpt, kill_at, dist = sys.argv[1], sys.argv[2], int(sys.argv[3]), sys.argv[4]
+nrow, ncol = 2, (4 if dist == "dist" else 2)
+obs = tfi_hamiltonian(nrow, ncol)
+svd = RandomizedSVD(niter=2, oversample=4)
+contract = (DistributedBMPS(8, svd=svd, n_shards=4) if dist == "dist"
+            else BMPS(8, svd=svd))
+
+def cb(step, e, state):
+    with open(log, "a") as f:
+        f.write(json.dumps({"step": step, "energy": e}) + "\n")
+    if kill_at and step >= kill_at:
+        os._exit(42)
+
+res = ite_run(computational_zeros(nrow, ncol), obs, 0.05, 8,
+              QRUpdate(rank=2, svd=svd), contract, measure_every=2,
+              callback=cb, checkpoint_dir=(ckpt or None), checkpoint_every=2)
+print("RESUMED_FROM", res.resumed_from)
+"""
+
+VQE_SCRIPT = r"""
+import json, os, sys
+from repro.core.observable import tfi_hamiltonian
+from repro.core.vqe import run_vqe
+
+log, ckpt, kill_at = sys.argv[1], sys.argv[2], int(sys.argv[3])
+obs = tfi_hamiltonian(2, 2)
+
+def cb(n, e, x):
+    with open(log, "a") as f:
+        f.write(json.dumps({"step": n, "energy": e}) + "\n")
+    if kill_at and n >= kill_at:
+        os._exit(42)
+
+res = run_vqe(2, 2, obs, n_layers=1, max_bond=2, maxiter=6, seed=3,
+              method="spsa", callback=cb,
+              checkpoint_dir=(ckpt or None), checkpoint_every=1)
+print("RESUMED_FROM", res.resumed_from)
+"""
+
+
+def _run_script(tmp_path, text, args, env=None, expect_rc=0):
+    script = tmp_path / "chaos.py"
+    script.write_text(text)
+    res = subprocess.run([sys.executable, str(script)] + [str(a) for a in args],
+                         env=env or ENV, capture_output=True, text=True)
+    assert res.returncode == expect_rc, (
+        f"rc={res.returncode}\nstdout:{res.stdout[-2000:]}\n"
+        f"stderr:{res.stderr[-2000:]}")
+    return res
+
+
+def _log_dict(log):
+    out = {}
+    for line in Path(log).read_text().splitlines():
+        rec = json.loads(line)
+        step, e = rec["step"], rec["energy"]
+        if step in out:   # re-measured after resume: must agree bit-for-bit
+            assert abs(out[step] - e) <= TOL, (step, out[step], e)
+        out[step] = e
+    return out
+
+
+def _chaos_roundtrip(tmp_path, script, kill_at, args_tail=(), env=None):
+    ref_log, got_log = tmp_path / "ref.jsonl", tmp_path / "got.jsonl"
+    ck = tmp_path / "ckpt"
+    _run_script(tmp_path, script, [ref_log, "", 0, *args_tail], env=env)
+    _run_script(tmp_path, script, [got_log, ck, kill_at, *args_tail],
+                env=env, expect_rc=42)
+    res = _run_script(tmp_path, script, [got_log, ck, 0, *args_tail], env=env)
+    assert "RESUMED_FROM None" not in res.stdout
+    ref, got = _log_dict(ref_log), _log_dict(got_log)
+    assert set(ref) == set(got)
+    for s in ref:
+        assert abs(ref[s] - got[s]) <= TOL, (s, ref[s], got[s])
+
+
+@pytest.mark.slow
+def test_chaos_kill_resume_ite_subprocess(tmp_path):
+    """ITE killed at the step-6 measurement (os._exit(42)); the resumed
+    process reproduces every per-step energy of the uninterrupted run."""
+    _chaos_roundtrip(tmp_path, ITE_SCRIPT, kill_at=6, args_tail=("single",))
+
+
+@pytest.mark.slow
+def test_chaos_kill_resume_ite_distributed_8dev(tmp_path):
+    """Same chaos contract with the column-sharded distributed sweep on 8
+    virtual devices — checkpoints are host numpy, so the snapshot is
+    mesh-independent."""
+    env = dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    _chaos_roundtrip(tmp_path, ITE_SCRIPT, kill_at=6, args_tail=("dist",),
+                     env=env)
+
+
+@pytest.mark.slow
+def test_chaos_kill_resume_vqe_subprocess(tmp_path):
+    """SPSA VQE killed at evaluation 7; the resumed process continues the
+    perturbation stream bit-identically."""
+    _chaos_roundtrip(tmp_path, VQE_SCRIPT, kill_at=7)
+
+
+# ---------------------------------------------------------------------------
+# Persistent planner cache across processes (slow)
+# ---------------------------------------------------------------------------
+
+WARMSTART_SCRIPT = r"""
+import json, sys
+import jax
+from repro.core import planner
+from repro.core.bmps import BMPS
+from repro.core.einsumsvd import RandomizedSVD
+from repro.core.ite import ite_run
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import QRUpdate, computational_zeros
+
+cache, phase = sys.argv[1], sys.argv[2]
+if phase == "warm":
+    n = planner.load_path_cache(cache)
+    assert n > 0, "expected a preloaded cache"
+svd = RandomizedSVD(niter=2, oversample=4)
+ite_run(computational_zeros(2, 2), tfi_hamiltonian(2, 2), 0.05, 2,
+        QRUpdate(rank=2, svd=svd), BMPS(8, svd=svd), measure_every=1)
+if phase == "cold":
+    planner.save_path_cache(cache)
+print("STATS", json.dumps(planner.stats()))
+"""
+
+
+@pytest.mark.slow
+def test_path_cache_warm_starts_second_process(tmp_path):
+    """Acceptance: a second process preloading the persisted cache replays
+    an identical workload with ZERO path-search misses."""
+    cache = tmp_path / "paths.json"
+    res = _run_script(tmp_path, WARMSTART_SCRIPT, [cache, "cold"])
+    cold = json.loads(res.stdout.split("STATS ", 1)[1])
+    assert cold["path_misses"] > 0
+    res = _run_script(tmp_path, WARMSTART_SCRIPT, [cache, "warm"])
+    warm = json.loads(res.stdout.split("STATS ", 1)[1])
+    assert warm["path_misses"] == 0
+    assert warm["path_preloaded"] > 0
+    assert warm["path_hits"] > 0

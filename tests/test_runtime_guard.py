@@ -1,0 +1,293 @@
+"""Runtime guard: fault-injection registry, the escalation ladder, the
+full-update fidelity floor, and the persistent planner path cache."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults, planner, runtime_guard
+from repro.core.bmps import BMPS
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD, einsumsvd
+from repro.core.observable import tfi_hamiltonian
+from repro.core.peps import FullUpdate, computational_zeros
+from repro.core.precision import wrap_svd
+from repro.kernels import dispatch
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _solve(option, key=None, rank=8, dtype=jnp.float32):
+    k = jax.random.PRNGKey(7)
+    t = jax.random.normal(k, (64, 32), dtype=dtype)
+    return einsumsvd(option, [t], ["ab"], "a", "b", rank,
+                     absorb="none", key=key if key is not None else k)
+
+
+# ---------------------------------------------------------------------------
+# The fault registry itself
+# ---------------------------------------------------------------------------
+
+class TestFaultRegistry:
+    def test_fires_on_exactly_the_nth_call(self):
+        faults.arm("x", nth=3)
+        assert faults.should_fire("x") is None
+        assert faults.should_fire("x") is None
+        spec = faults.should_fire("x")
+        assert spec is not None and spec.fired == 1
+        assert faults.should_fire("x") is None    # one-shot by default
+
+    def test_times_fires_a_contiguous_window(self):
+        faults.arm("x", nth=2, times=2)
+        hits = [faults.should_fire("x") is not None for _ in range(5)]
+        assert hits == [False, True, True, False, False]
+
+    def test_rearm_resets_the_call_counter(self):
+        faults.arm("x", nth=1)
+        assert faults.should_fire("x") is not None
+        faults.arm("x", nth=1)
+        assert faults.should_fire("x") is not None
+
+    def test_unarmed_site_is_a_noop(self):
+        assert faults.should_fire("never-armed") is None
+
+    def test_armed_context_disarms_on_exit(self):
+        with faults.armed("x"):
+            assert "x" in faults.active()
+        assert "x" not in faults.active()
+
+    def test_bad_spec_rejected(self):
+        with pytest.raises(ValueError):
+            faults.arm("x", nth=0)
+        with pytest.raises(ValueError):
+            faults.arm("x", times=0)
+
+
+# ---------------------------------------------------------------------------
+# Detection + the escalation ladder
+# ---------------------------------------------------------------------------
+
+class TestGuardLadder:
+    def test_unguarded_corruption_propagates(self):
+        """Without an active guard the library behaves exactly as before:
+        an injected NaN flows through to the caller."""
+        with faults.armed("einsumsvd.result", action="nan"):
+            u, s, v = _solve(DirectSVD())
+        assert np.isnan(np.asarray(s)).any()
+
+    def test_nan_recovers_on_the_exact_svd_rung(self):
+        before = planner.stats()
+        with faults.armed("einsumsvd.result", action="nan"):
+            with runtime_guard.RuntimeGuard() as g:
+                u, s, v = _solve(RandomizedSVD())
+        assert np.isfinite(np.asarray(s)).all()
+        actions = [e.action for e in g.report.events]
+        assert actions == ["detected", "retry:exact_svd",
+                           "recovered:exact_svd"]
+        assert g.report.ok
+        delta = planner.stats_since(before)
+        assert delta["guard_nan_events"] == 1
+        assert delta["guard_rung_exact_svd"] == 1
+        assert delta["guard_recovered"] == 1
+
+    def test_recovery_is_within_the_exact_budget(self):
+        """The exact-SVD rung is deterministic LAPACK: the recovered
+        spectrum must match a clean DirectSVD solve to the exact-tier
+        budget (core/precision.py: 1e-12)."""
+        from repro.core.precision import error_budget
+        _, s_clean, _ = _solve(DirectSVD())
+        with faults.armed("einsumsvd.result", action="nan"):
+            with runtime_guard.RuntimeGuard():
+                _, s_rec, _ = _solve(RandomizedSVD())
+        rel = (np.linalg.norm(np.asarray(s_rec) - np.asarray(s_clean))
+               / np.linalg.norm(np.asarray(s_clean)))
+        assert rel <= error_budget("contract_onelayer", "exact")
+
+    def test_collapse_detected_and_recovered(self):
+        with faults.armed("einsumsvd.result", action="zero"):
+            with runtime_guard.RuntimeGuard() as g:
+                u, s, v = _solve(RandomizedSVD())
+        assert float(np.max(np.abs(np.asarray(s)))) > 0
+        assert g.report.causes() == {"collapse": 1}
+
+    def test_mixed_precision_escalates_to_exact_precision(self):
+        """Two consecutive corrupted solves climb past exact_svd to the
+        precision-unwrap rung (mixed -> exact)."""
+        opt = wrap_svd(RandomizedSVD(), "mixed")
+        with faults.armed("einsumsvd.result", action="nan", times=2):
+            with runtime_guard.RuntimeGuard() as g:
+                u, s, v = _solve(opt, dtype=jnp.float64)
+        assert np.isfinite(np.asarray(s)).all()
+        actions = [e.action for e in g.report.events]
+        assert "retry:exact_precision" in actions
+        assert actions[-1] == "recovered:exact_precision"
+        assert g.report.counters["guard_rung_exact_precision"] == 1
+
+    def test_kernel_fault_takes_the_dense_rung_first(self):
+        """A raising kernel site retries dense-first (keeping the original
+        solver) and restores the per-site mode afterwards."""
+        planner.clear()    # cached fused executables skip Python dispatch
+        prev = dispatch.set_kernel_backend("pallas", site="gram")
+        try:
+            with faults.armed("kernel.gram", times=99):
+                with runtime_guard.RuntimeGuard() as g:
+                    u, s, v = _solve(RandomizedSVD())
+        finally:
+            dispatch.set_kernel_backend("auto")
+        assert np.isfinite(np.asarray(s)).all()
+        actions = [e.action for e in g.report.events]
+        assert actions == ["detected", "retry:dense_kernel",
+                           "recovered:dense_kernel"]
+        assert g.report.causes() == {"exception": 1}
+
+    def test_kernel_fault_unguarded_raises_injected_fault(self):
+        planner.clear()
+        dispatch.set_kernel_backend("pallas", site="gram")
+        try:
+            with faults.armed("kernel.gram"):
+                with pytest.raises(faults.InjectedFault) as ei:
+                    _solve(RandomizedSVD())
+            assert ei.value.site == "kernel.gram"
+        finally:
+            dispatch.set_kernel_backend("auto")
+
+    def test_exhausted_ladder_raises_structured_never_nan(self):
+        with faults.armed("einsumsvd.result", action="nan", times=99):
+            with runtime_guard.RuntimeGuard() as g:
+                with pytest.raises(runtime_guard.GuardExhaustedError) as ei:
+                    _solve(RandomizedSVD())
+        err = ei.value
+        assert err.site == "einsumsvd" and err.cause == "nan"
+        assert err.attempts >= 1 and err.events
+        assert not g.report.ok
+        assert g.report.counters["guard_exhausted"] == 1
+
+    def test_max_retries_bounds_the_ladder(self):
+        cfg = runtime_guard.GuardConfig(max_retries=1)
+        with faults.armed("einsumsvd.result", action="nan", times=99):
+            with runtime_guard.RuntimeGuard(cfg) as g:
+                with pytest.raises(runtime_guard.GuardExhaustedError) as ei:
+                    _solve(RandomizedSVD())
+        assert ei.value.attempts == 1
+
+    def test_resolve_accepts_the_documented_forms(self):
+        assert runtime_guard.resolve(None) is None
+        assert runtime_guard.resolve(False) is None
+        assert isinstance(runtime_guard.resolve(True), runtime_guard.RuntimeGuard)
+        cfg = runtime_guard.GuardConfig(max_retries=7)
+        assert runtime_guard.resolve(cfg).config.max_retries == 7
+        g = runtime_guard.RuntimeGuard()
+        assert runtime_guard.resolve(g) is g
+        with pytest.raises(TypeError):
+            runtime_guard.resolve("yes")
+
+    def test_counters_surface_in_planner_stats(self):
+        s = planner.stats()
+        for k in ("guard_nan_events", "guard_recovered", "guard_exhausted",
+                  "guard_rung_dense_kernel"):
+            assert k in s
+
+
+# ---------------------------------------------------------------------------
+# Full-update fidelity floor
+# ---------------------------------------------------------------------------
+
+def _tiny_full_ite(guard, steps=1):
+    from repro.core.ite import ite_run
+    obs = tfi_hamiltonian(2, 2)
+    st = computational_zeros(2, 2)
+    return ite_run(st, obs, 0.05, steps, FullUpdate(rank=2, chi=8),
+                   BMPS(8), measure_every=1, guard=guard)
+
+
+class TestFidelityFloor:
+    def test_degraded_accepted_warns_and_continues(self):
+        cfg = runtime_guard.GuardConfig(fidelity_floor=1.5)  # unreachable
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            res = _tiny_full_ite(cfg)
+        assert any("fidelity" in str(x.message) for x in w)
+        assert res.guard is not None
+        assert res.guard.counters.get("guard_fidelity_events", 0) >= 1
+        assert res.guard.counters.get("guard_degraded_accepted", 0) >= 1
+        assert all(np.isfinite(e) for e in res.energies)
+        assert res.guard.ok    # degraded != exhausted
+
+    def test_strict_floor_raises_structured(self):
+        cfg = runtime_guard.GuardConfig(fidelity_floor=1.5,
+                                        fidelity_strict=True)
+        with pytest.raises(runtime_guard.GuardExhaustedError) as ei:
+            _tiny_full_ite(cfg)
+        assert ei.value.site == "full_update"
+        assert ei.value.cause == "fidelity"
+
+    def test_clean_run_has_an_empty_report(self):
+        res = _tiny_full_ite(True)
+        assert res.guard is not None and res.guard.ok
+        assert res.guard.events == []
+
+
+# ---------------------------------------------------------------------------
+# Persistent planner path cache
+# ---------------------------------------------------------------------------
+
+class TestPersistentPathCache:
+    def _warm(self):
+        k = jax.random.PRNGKey(0)
+        a = jax.random.normal(k, (8, 8, 4))
+        b = jax.random.normal(k, (4, 8, 8))
+        return einsumsvd(RandomizedSVD(), [a, b], ["abk", "kcd"],
+                         "ab", "cd", 6, key=k)
+
+    def test_roundtrip_gives_zero_misses(self, tmp_path):
+        planner.clear()
+        self._warm()
+        f = tmp_path / "paths.json"
+        n = planner.save_path_cache(str(f))
+        assert n == planner.stats()["path_cache_size"] > 0
+        planner.clear()
+        assert planner.load_path_cache(str(f)) == n
+        before = planner.stats()
+        self._warm()
+        delta = planner.stats_since(before)
+        assert delta["path_misses"] == 0
+        assert delta["path_hits"] > 0
+        assert planner.stats()["path_preloaded"] == n
+
+    def test_missing_file_is_a_silent_cold_start(self, tmp_path):
+        assert planner.load_path_cache(str(tmp_path / "nope.json")) == 0
+
+    def test_truncated_file_warns_and_cold_starts(self, tmp_path):
+        planner.clear()
+        self._warm()
+        f = tmp_path / "paths.json"
+        planner.save_path_cache(str(f))
+        f.write_text(f.read_text()[: f.stat().st_size // 2])
+        planner.clear()
+        with pytest.warns(RuntimeWarning, match="cold start"):
+            assert planner.load_path_cache(str(f)) == 0
+
+    def test_checksum_mismatch_rejected(self, tmp_path):
+        planner.clear()
+        self._warm()
+        f = tmp_path / "paths.json"
+        planner.save_path_cache(str(f))
+        payload = json.loads(f.read_text())
+        payload["entries"][0][0] = "zz->z"    # tamper without re-checksumming
+        f.write_text(json.dumps(payload))
+        planner.clear()
+        with pytest.warns(RuntimeWarning, match="checksum"):
+            assert planner.load_path_cache(str(f)) == 0
+
+    def test_unknown_format_version_rejected(self, tmp_path):
+        f = tmp_path / "paths.json"
+        f.write_text(json.dumps({"format": 99, "checksum": "", "entries": []}))
+        with pytest.warns(RuntimeWarning):
+            assert planner.load_path_cache(str(f)) == 0
