@@ -73,6 +73,17 @@ test-robustness:
 bench-resume:
 	PYTHONPATH=src $(PY) benchmarks/bench_resume.py
 
+# Serving lane: served-vs-per-query equivalence (property-based), threaded
+# concurrency, and cache-lifecycle (invalidation / LRU eviction) tests.
+.PHONY: test-serving
+test-serving:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_serving.py
+
+# Batched+prefix-cached serving throughput vs per-query cold contraction.
+.PHONY: bench-serving
+bench-serving:
+	PYTHONPATH=src $(PY) benchmarks/bench_serving.py
+
 .PHONY: docs-check
 docs-check:
 	$(PY) tools/check_doc_links.py

@@ -1,0 +1,91 @@
+"""Serving throughput: batched+prefix-cached amplitudes vs per-query cold.
+
+The acceptance benchmark for the PEPS query serving engine
+(``repro.core.serving``): a 6x6 RQC-evolved state served at chi=8, with a
+batch of bitstring queries sharing their rows ``0..nrow-2`` prefix (the
+sampling-sweep regime the prefix cache targets).
+
+* ``serving/cold_per_query``  — one full boundary sweep per amplitude
+  (``bmps.amplitude`` in a loop; compile excluded by warmup).
+* ``serving/batched_cached``  — ``ServingEngine.amplitude_batch`` with a
+  warm prefix cache: the shared-prefix sweep is cached, only the batched
+  final-row close runs per query.
+* ``serving/speedup``         — must be >= 5x (pinned in baselines/).
+* ``serving/equivalence``     — max |served - direct| must be <= 1e-10.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit, emit_info, save_rows, timeit
+from repro.core import bmps as B
+from repro.core.circuits import apply_circuit_exact_peps, random_circuit
+from repro.core.einsumsvd import DirectSVD
+from repro.core.peps import computational_zeros
+from repro.core.serving import ServingEngine
+
+GRID = 6
+LAYERS = 8
+CHI = 8
+BATCH = 64 if SCALE == "small" else 256
+COLD_QUERIES = 4 if SCALE == "small" else 16
+
+
+def main() -> None:
+    # DirectSVD: amplitude closures of deep RQC states live in the *small*
+    # singular directions, which RandomizedSVD's power iterations smear —
+    # the per-query reference itself drifts there (see docs/serving.md).
+    option = B.BMPS(CHI, DirectSVD())
+    circ = random_circuit(GRID, GRID, LAYERS, seed=7)
+    state = apply_circuit_exact_peps(computational_zeros(GRID, GRID), circ)
+    emit_info("serving/state",
+              f"{GRID}x{GRID} RQC depth {LAYERS} bond {state.max_bond()} "
+              f"chi {CHI}")
+
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, 2, (GRID - 1, GRID))
+    finals = rng.integers(0, 2, (BATCH, 1, GRID))
+    bits = np.concatenate(
+        [np.broadcast_to(prefix, (BATCH, GRID - 1, GRID)), finals], axis=1)
+
+    # -- cold: one full one-layer boundary sweep per query -------------------
+    cold_bits = bits[:COLD_QUERIES]
+
+    def cold_loop():
+        return [B.amplitude(state, b, option) for b in cold_bits]
+
+    t_cold = timeit(cold_loop) / COLD_QUERIES
+    emit("serving/cold_per_query", t_cold, f"qps={1.0 / t_cold:.1f}")
+
+    # -- served: warm prefix cache + batched final-row close -----------------
+    with ServingEngine(start=False) as engine:
+        engine.register_state("rqc", state, option)
+        engine.amplitude_batch("rqc", bits)  # populate cache, compile buckets
+        t_served = timeit(engine.amplitude_batch, "rqc", bits) / BATCH
+        emit("serving/batched_cached", t_served, f"qps={1.0 / t_served:.1f}")
+
+        speedup = t_cold / t_served
+        emit_info("serving/speedup",
+                  f"x{speedup:.1f} (cold per-query vs batched+cached, "
+                  f"batch {BATCH})")
+
+        served = np.asarray(engine.amplitude_batch("rqc", bits))
+        direct = np.asarray([complex(B.amplitude(state, b, option))
+                             for b in cold_bits])
+        err = float(np.abs(served[:COLD_QUERIES] - direct).max())
+        emit_info("serving/equivalence",
+                  f"max|served-direct|={err:.2e} over {COLD_QUERIES} queries "
+                  f"(tol 1e-10)")
+
+        st = engine.stats()
+        ps = st["per_state"]["rqc"]
+        emit_info("serving/cache",
+                  f"prefix_hits={ps['prefix_hits']} "
+                  f"prefix_misses={ps['prefix_misses']} "
+                  f"rows_absorbed={st['rows_absorbed']} "
+                  f"padded={st['padded_queries']}")
+
+
+if __name__ == "__main__":
+    main()
+    save_rows("bench_serving.json")

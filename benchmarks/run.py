@@ -19,7 +19,7 @@ import traceback
 from benchmarks import (bench_caching, bench_contraction, bench_distributed,
                         bench_engines, bench_evolution, bench_ite,
                         bench_kernels, bench_resume, bench_roofline,
-                        bench_rqc, bench_vqe)
+                        bench_rqc, bench_serving, bench_vqe)
 from benchmarks.common import emit_info, save_rows
 
 SUITES = {
@@ -34,6 +34,7 @@ SUITES = {
     "engines": bench_engines,          # boundary-engine frontier (ISSUE 6)
     "kernels": bench_kernels,          # Pallas kernels + mixed precision (ISSUE 7)
     "resume": bench_resume,            # checkpoint overhead + warm start (ISSUE 8)
+    "serving": bench_serving,          # batched query serving (ISSUE 9)
 }
 
 

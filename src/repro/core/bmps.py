@@ -236,6 +236,110 @@ def amplitude(state, bits, option: BMPS, key=None) -> jnp.ndarray:
     return val * jnp.exp(state.log_scale).astype(val.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Batched amplitudes: shared boundary prefix + vmapped final-row close
+# ---------------------------------------------------------------------------
+#
+# The one-layer <x|psi> network of an nrow-row PEPS depends on the bits of
+# row i only from the absorption of row i onwards, so queries that share
+# the bits of rows 0..nrow-2 share the entire boundary sweep — only the
+# final row differs.  And because the final row's dangling (down) bonds all
+# have dimension 1, absorbing it never needs truncation: the einsumsvd
+# matrices have row dimension <= chi, so the zip-up at the last row is
+# rank-lossless and the closing scalar equals the *exact* transfer-matrix
+# product of the boundary MPS with the selected final-row tensors.  That
+# exact product is a chain of small einsums with no SVDs — trivially
+# batchable over the queries' final-row bits.  This pair of facts is the
+# serving engine's "environment prefix cache" contract
+# (:mod:`repro.core.serving`, docs/serving.md).
+
+def final_row_amplitudes(env, row_sites, bits, log_scale=0.0) -> jnp.ndarray:
+    """Batched exact close of a boundary MPS against final-row selections.
+
+    ``env`` is the one-layer boundary MPS after absorbing rows
+    ``0..nrow-2`` (tensors ``(l, d, r)``, the "prefix" environment);
+    ``row_sites`` the final row's ``(p, u, l, d, r)`` site tensors (their
+    down bonds must be dim 1); ``bits`` an integer array ``(B, ncol)`` of
+    final-row bit selections.  Returns the ``(B,)`` amplitudes, including
+    the state's ``exp(log_scale)`` factor.
+
+    The whole chain — per-column physical-index gather + batched transfer
+    einsums — is one jit-compiled function per ``(shapes, B)`` signature
+    via :func:`repro.core.planner.fused_fn`, so a serving loop that pads
+    batches to a fixed bucket size replays a single compiled executable.
+    """
+    from repro.core import planner
+    bits = jnp.asarray(bits, dtype=jnp.int32)
+    if bits.ndim != 2:
+        raise ValueError(f"bits must be (B, ncol), got shape {bits.shape}")
+    B = int(bits.shape[0])
+    ncol = len(env)
+    dtype = row_sites[0].dtype
+    for t in row_sites:
+        if t.shape[3] != 1:
+            raise ValueError(
+                "final_row_amplitudes needs a bottom row (down bonds dim 1); "
+                f"got down bond {t.shape[3]}")
+    sig = ("serve_close", ncol, B,
+           tuple(tuple(t.shape) for t in env),
+           tuple(tuple(t.shape) for t in row_sites),
+           jnp.dtype(dtype).name, jax.default_backend())
+
+    def build():
+        @jax.jit
+        def run(env_ts, site_ts, bits_arr, log_scale_arr):
+            acc = jnp.ones((B, 1, 1), dtype=dtype)
+            for j in range(ncol):
+                sel = jnp.take(site_ts[j], bits_arr[:, j], axis=0)
+                sel = sel[:, :, :, 0, :]  # (B, u, l, r): squeeze the dim-1 down bond
+                # acc (x=batch, b=env bond, c=row bond) x env_j (b, u, r')
+                # x sel (x, u, c, s) -> (x, r', s); plan-cached per shape class.
+                acc = planner.cached_einsum("xbc,bur,xucs->xrs",
+                                            acc, env_ts[j], sel)
+            vals = acc.reshape(B)
+            return vals * jnp.exp(log_scale_arr).astype(vals.dtype)
+        return run
+
+    fn = planner.fused_fn("serve_close", sig, build)
+    return fn(list(env), list(row_sites), bits,
+              jnp.asarray(log_scale, dtype=jnp.float64))
+
+
+def amplitudes(state, bits_batch, option: BMPS, key=None) -> jnp.ndarray:
+    """Batched <x|psi>: one boundary sweep per shared row prefix.
+
+    ``bits_batch`` is ``(B, nrow*ncol)`` or ``(B, nrow, ncol)``.  Queries
+    are grouped by the bits of rows ``0..nrow-2``; each group pays one
+    boundary-MPS prefix sweep (identical keys/engine/einsumsvd sequence to
+    per-query :func:`amplitude`), then one batched exact final-row close
+    (:func:`final_row_amplitudes`).  Per query this matches
+    ``amplitude(state, bits, option, key)`` to rounding.
+
+    This is the uncached batched entry point; :mod:`repro.core.serving`
+    adds the LRU environment prefix cache, batch bucketing and the
+    request queue on top of the same primitives.
+    """
+    import numpy as np
+    from repro.core.environments import onelayer_prefix_environment
+    if _distributed_module(option) is not None:
+        raise TypeError("batched amplitudes serve single-device BMPS options")
+    bits_arr = np.asarray(bits_batch)
+    B = bits_arr.shape[0]
+    bits_arr = bits_arr.reshape(B, state.nrow, state.ncol)
+    groups: dict = {}
+    for idx in range(B):
+        prefix = tuple(tuple(int(b) for b in row) for row in bits_arr[idx][:-1])
+        groups.setdefault(prefix, []).append(idx)
+    vals = [None] * B
+    for prefix, idxs in groups.items():
+        env = onelayer_prefix_environment(state, prefix, option, key)
+        fb = jnp.asarray(bits_arr[idxs, -1, :].astype(np.int32))
+        out = final_row_amplitudes(env, state.sites[-1], fb, state.log_scale)
+        for k, i in enumerate(idxs):
+            vals[i] = out[k]
+    return jnp.stack(vals)
+
+
 def norm_squared(state, option: BMPS, key=None) -> jnp.ndarray:
     """<psi|psi> via two-layer contraction."""
     val = contract_twolayer(state.sites, state.sites, option, key)

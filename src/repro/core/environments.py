@@ -77,6 +77,64 @@ def top_environments(bra_rows, ket_rows, option: BMPS, key=None) -> List[List[jn
 
 
 # ---------------------------------------------------------------------------
+# One-layer prefix environments (the serving engine's amplitude "prefix")
+# ---------------------------------------------------------------------------
+#
+# The <x|psi> amplitude network is one-layer: site (i, j) is the PEPS
+# tensor projected on bit x[i, j].  Its top boundary environments depend
+# only on the bits of the rows absorbed so far, so they are shared by
+# every query with the same bit *prefix* — the amplitude analog of the
+# two-layer ``top_environments`` (which are fully query-independent).
+# ``repro.core.serving`` caches these per registered state; the helpers
+# here are the uncached reference entry points.
+
+def onelayer_top_environments(rows, option: BMPS, key=None,
+                              nrow_total: int = None) -> List[List[jnp.ndarray]]:
+    """Boundary-MPS levels of a one-layer (u,l,d,r) grid, top-down.
+
+    Returns ``env`` with ``env[k]`` = the boundary MPS after absorbing rows
+    ``0..k`` (length ``len(rows)``; tensors ``(l, d, r)``).  Key
+    consumption matches :func:`repro.core.bmps.contract_onelayer` exactly —
+    row ``i`` consumes ``keys[i]`` of one ``len == max(nrow, 2)`` split —
+    so closing ``env[-1]`` reproduces the per-query contraction bit-for-bit.
+    ``nrow_total`` sets the split length when ``rows`` is only the prefix
+    of a taller grid (default: ``len(rows)``).
+    """
+    from repro.core.bmps import _distributed_module, _keys
+    if _distributed_module(option) is not None:
+        raise TypeError("onelayer prefix environments serve single-device "
+                        "BMPS options")
+    eng = get_engine(option.engine)
+    nrow = nrow_total if nrow_total is not None else len(rows)
+    keys = _keys(key, max(nrow, 2))
+    svec = [t.reshape(t.shape[1], t.shape[2], t.shape[3]) for t in rows[0]]
+    envs = [svec]
+    for i in range(1, len(rows)):
+        svec = eng.absorb_onelayer(svec, rows[i], option.chi, option.svd,
+                                   keys[i])
+        envs.append(svec)
+    return envs
+
+
+def onelayer_prefix_environment(state, prefix_bits, option: BMPS,
+                                key=None) -> List[jnp.ndarray]:
+    """Boundary MPS of rows ``0..len(prefix_bits)-1`` of <x|psi>.
+
+    ``prefix_bits`` is a sequence of per-row bit sequences (typically rows
+    ``0..nrow-2`` — everything but the final row).  An empty prefix (a
+    one-row state) returns the trivial boundary.  Combined with
+    :func:`repro.core.bmps.final_row_amplitudes` this evaluates amplitudes
+    for any batch of final-row bits."""
+    ncol = state.ncol
+    if len(prefix_bits) == 0:
+        return [jnp.ones((1, 1, 1), dtype=state.dtype) for _ in range(ncol)]
+    rows = [[state.sites[i][j][int(prefix_bits[i][j])] for j in range(ncol)]
+            for i in range(len(prefix_bits))]
+    return onelayer_top_environments(rows, option, key,
+                                     nrow_total=state.nrow)[-1]
+
+
+# ---------------------------------------------------------------------------
 # Strip boundaries (the full update's left/right neighborhood environments)
 # ---------------------------------------------------------------------------
 #

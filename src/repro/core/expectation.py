@@ -146,22 +146,39 @@ def norm_from_envs(state, top, bottom) -> jnp.ndarray:
     return strip_value(top[i], bottom[i], [state.sites[i]], [state.sites[i]])
 
 
+#: Seed of the PRNG key :func:`expectation` uses when called with
+#: ``key=None``.  The serving engine (:mod:`repro.core.serving`) builds its
+#: cached per-state row environments from the same default so a served
+#: observable query reproduces the direct call exactly.
+DEFAULT_EXPECTATION_KEY_SEED = 5
+
+
+def expectation_from_envs(state, obs: Observable, top, bottom) -> jnp.ndarray:
+    """<psi|H|psi>/<psi|psi> from precomputed row environments.
+
+    ``(top, bottom)`` are the :func:`repro.core.environments.row_environments`
+    of ``state`` — fully query-independent, so callers serving many
+    observables against one state (the serving engine's cache) pay the two
+    environment sweeps once and each query only the per-term strip
+    contractions."""
+    total = 0.0
+    for term in obs:
+        i0, i1 = term_rows(term, state.ncol)
+        if i1 - i0 > 1:
+            raise NotImplementedError("terms spanning >2 rows need SWAP routing")
+        total = total + term.coeff * _term_value(state, term, top[i0], bottom[i1])
+    return total / norm_from_envs(state, top, bottom)
+
+
 def expectation(state, obs: Observable, option: BMPS, use_cache: bool = True,
                 key=None) -> jnp.ndarray:
     """<psi|H|psi>/<psi|psi> for an Observable H of 1-/2-site terms."""
     if key is None:
-        key = jax.random.PRNGKey(5)
+        key = jax.random.PRNGKey(DEFAULT_EXPECTATION_KEY_SEED)
     nrow, ncol = state.nrow, state.ncol
     if use_cache:
         top, bottom = row_environments(state, option, key)
-        norm = norm_from_envs(state, top, bottom)
-        total = 0.0
-        for term in obs:
-            i0, i1 = term_rows(term, ncol)
-            if i1 - i0 > 1:
-                raise NotImplementedError("terms spanning >2 rows need SWAP routing")
-            total = total + term.coeff * _term_value(state, term, top[i0], bottom[i1])
-        return total / norm
+        return expectation_from_envs(state, obs, top, bottom)
 
     # -- no cache: each term pays its own environment contractions ----------
     total = 0.0

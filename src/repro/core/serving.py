@@ -1,0 +1,571 @@
+"""Batched PEPS query serving: amplitudes and observables as a service.
+
+The RQC amplitude workload (paper Section VI) is high-traffic by nature:
+millions of ``<x|psi>`` and ``<psi|O|psi>`` queries against a small set of
+hot PEPS states, where most of the boundary-MPS sweep is query-independent.
+This module turns the repo's contraction stack into a query engine:
+
+* **Environment prefix cache** — per registered state, an LRU-bounded
+  cache of one-layer boundary environments keyed by the query's *bit
+  prefix* (the bits of the rows absorbed so far).  Queries sharing a
+  prefix share the whole sweep; because the final row's dangling bonds
+  are dim 1, its absorption is rank-lossless and the per-query work
+  collapses to one exact transfer-matrix close
+  (:func:`repro.core.bmps.final_row_amplitudes` — see the derivation
+  there).  Observable queries use the fully query-independent
+  :func:`repro.core.environments.row_environments` as their prefix: two
+  sweeps per state, then one strip contraction per term
+  (:func:`repro.core.expectation.expectation_from_envs`).
+* **Batched final-row contraction** — amplitude requests that share a
+  state and prefix are closed in one batched, jit-compiled call.  Batches
+  are padded up to a fixed ladder of bucket sizes so the planner's
+  fused-executable cache (:func:`repro.core.planner.fused_fn`, tag
+  ``"serve_close"``) stays warm: every bucket size compiles once per
+  state-shape signature and then replays.
+* **Request queue + dispatcher** — a thread-safe submit/await front end
+  (:class:`concurrent.futures.Future` results) with a micro-batching
+  window: the dispatcher drains the queue for up to ``window_ms`` (or
+  ``max_batch`` requests), groups by state, and executes.  All JAX work
+  runs in the dispatcher thread (or the calling thread for the
+  synchronous entry points) under one engine lock — client threads only
+  enqueue, so arrival order never changes any result.
+
+Cache lifecycle rules (tested in ``tests/test_serving.py``):
+
+* ``register_state`` with an existing name **invalidates** that state's
+  cached environments immediately — a served query that starts after
+  ``register_state`` returns always sees the new tensors (stale-env
+  serving is a silent-wrong-answer bug, so this is load-bearing).
+* At most ``max_states`` registered states keep materialized caches; the
+  least recently *queried* state's environments are dropped when the
+  budget is exceeded.  The state itself stays registered — the next query
+  re-materializes its environments (a cache miss, never an error).
+* Eviction only unlinks cache entries; an in-flight batch holds direct
+  references to the environments it reads, so eviction can never corrupt
+  a result.
+
+See docs/serving.md for the full contract and ``launch/serve.py`` for the
+CLI server; throughput/latency baselines are pinned by
+``benchmarks/bench_serving.py``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue as _queuelib
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bmps import BMPS, _distributed_module, _keys, \
+    final_row_amplitudes
+from repro.core.engines import get_engine
+from repro.core.environments import row_environments
+from repro.core.expectation import DEFAULT_EXPECTATION_KEY_SEED, \
+    expectation_from_envs
+from repro.core.observable import Observable
+
+#: Default ladder of amplitude batch sizes.  A batch of B queries is
+#: executed in chunks: full chunks of the largest bucket, then the
+#: smallest bucket that fits the remainder (padded).  Each bucket size
+#: jit-compiles the batched close once per state-shape signature.
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+class LRUCache:
+    """Ordered-dict LRU with hit/miss/eviction counters.
+
+    Not internally locked: the serving engine serializes all access under
+    its own lock.  ``get`` counts a hit or miss; ``peek`` does neither
+    (used for ancestor-prefix probes, so the counters reflect one lookup
+    per query group and stay reconcilable against a query log)."""
+
+    def __init__(self, max_entries: int):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self):
+        return len(self._d)
+
+    def get(self, key):
+        try:
+            val = self._d[key]
+        except KeyError:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def peek(self, key):
+        val = self._d.get(key)
+        if val is not None:
+            self._d.move_to_end(key)
+        return val
+
+    def put(self, key, value):
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.max_entries:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self):
+        self._d.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._d)}
+
+
+@dataclasses.dataclass
+class _StateEntry:
+    """A registered state plus its derived, evictable caches."""
+    name: str
+    state: object
+    option: BMPS
+    amp_keys: list                 # per-row keys, matching contract_onelayer
+    env_key: object                # row_environments key (observable path)
+    prefix: LRUCache               # bit-prefix tuple -> boundary MPS
+    version: int
+    obs_envs: Optional[tuple] = None   # cached (top, bottom) or None
+    obs_env_builds: int = 0
+    obs_env_hits: int = 0
+
+
+@dataclasses.dataclass
+class _Request:
+    kind: str                      # "amplitude" | "expectation"
+    name: str
+    payload: object                # (nrow, ncol) int bits / Observable
+    future: Future
+    submitted: float
+
+
+_SHUTDOWN = object()
+
+
+class ServingEngine:
+    """Batched PEPS query engine with an environment prefix cache.
+
+    Parameters
+    ----------
+    max_states:    how many registered states keep materialized caches
+                   (LRU on last query; see module docstring).
+    max_prefixes:  per-state bound on cached bit-prefix environments.
+    bucket_sizes:  amplitude batch-size ladder (sorted ascending).
+    window_ms:     micro-batching window of the dispatcher: after the
+                   first request is dequeued, keep draining for this long
+                   (or until ``max_batch``) before executing.
+    max_batch:     upper bound on requests per dispatch cycle.
+    start:         start the dispatcher thread immediately.  With
+                   ``start=False`` the synchronous entry points still work
+                   (they compute in the calling thread); ``submit_*``
+                   requires the dispatcher and will start it lazily.
+
+    The synchronous entry points (:meth:`amplitude`, :meth:`amplitude_batch`,
+    :meth:`expectation`) and the dispatcher share one compute path and one
+    lock, so values never depend on which path served them.
+    """
+
+    def __init__(self, max_states: int = 4, max_prefixes: int = 128,
+                 bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
+                 window_ms: float = 2.0, max_batch: int = 256,
+                 start: bool = True):
+        if max_states < 1:
+            raise ValueError("max_states must be >= 1")
+        self.max_states = max_states
+        self.max_prefixes = max_prefixes
+        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+        if not self.bucket_sizes or self.bucket_sizes[0] < 1:
+            raise ValueError("bucket_sizes must be positive")
+        self.window_ms = float(window_ms)
+        self.max_batch = int(max_batch)
+        self._states: Dict[str, _StateEntry] = {}
+        self._hot: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.RLock()
+        self._queue: "_queuelib.Queue" = _queuelib.Queue()
+        self._counters = collections.Counter()
+        self._dispatcher: Optional[threading.Thread] = None
+        self._closed = False
+        if start:
+            self._ensure_dispatcher()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self):
+        """Stop the dispatcher (idempotent).  Pending requests drain first."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            t = self._dispatcher
+        if t is not None:
+            self._queue.put(_SHUTDOWN)
+            t.join()
+        with self._lock:
+            self._dispatcher = None
+
+    def _ensure_dispatcher(self):
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ServingEngine is closed")
+            if self._dispatcher is None or not self._dispatcher.is_alive():
+                self._dispatcher = threading.Thread(
+                    target=self._dispatch_loop, name="peps-serving-dispatch",
+                    daemon=True)
+                self._dispatcher.start()
+
+    # -- registration -------------------------------------------------------
+
+    def register_state(self, name: str, state, option: BMPS, key=None,
+                       env_key=None) -> None:
+        """Register (or replace) a servable state.
+
+        ``option`` must be a single-device :class:`~repro.core.bmps.BMPS`.
+        ``key`` seeds the amplitude row keys exactly like
+        ``bmps.amplitude(..., key=...)`` (default ``None`` — the same
+        default split); ``env_key`` seeds the observable row environments
+        (default: :func:`repro.core.expectation.expectation`'s default).
+        Re-registering a name **replaces the state and invalidates every
+        cached environment derived from it**; queries executing after this
+        call returns are served from the new tensors.
+        """
+        if not isinstance(option, BMPS) or _distributed_module(option) is not None:
+            raise TypeError(
+                f"serving requires a single-device BMPS option, got "
+                f"{type(option).__name__}")
+        get_engine(option.engine)  # fail fast
+        if env_key is None:
+            env_key = jax.random.PRNGKey(DEFAULT_EXPECTATION_KEY_SEED)
+        amp_keys = list(_keys(key, max(state.nrow, 2)))
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ServingEngine is closed")
+            old = self._states.get(name)
+            version = old.version + 1 if old is not None else 0
+            self._states[name] = _StateEntry(
+                name=name, state=state, option=option, amp_keys=amp_keys,
+                env_key=env_key, prefix=LRUCache(self.max_prefixes),
+                version=version)
+            # the new entry starts cold: whatever budget slot the old
+            # version held is released (its envs are unreachable now).
+            self._hot.pop(name, None)
+            if old is not None:
+                self._counters["invalidations"] += 1
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            self._states.pop(name)  # KeyError propagates: caller bug
+            self._hot.pop(name, None)
+
+    def registered(self) -> List[str]:
+        with self._lock:
+            return list(self._states)
+
+    # -- submission (thread-safe; any thread) -------------------------------
+
+    def submit_amplitude(self, name: str, bits) -> Future:
+        """Enqueue one <bits|psi> query; resolves to a complex scalar."""
+        self._ensure_dispatcher()
+        bits = np.asarray(bits, dtype=np.int64)
+        fut: Future = Future()
+        self._queue.put(_Request("amplitude", name, bits, fut,
+                                 time.monotonic()))
+        return fut
+
+    def submit_expectation(self, name: str, obs: Observable) -> Future:
+        """Enqueue one <psi|O|psi>/<psi|psi> query."""
+        self._ensure_dispatcher()
+        fut: Future = Future()
+        self._queue.put(_Request("expectation", name, obs, fut,
+                                 time.monotonic()))
+        return fut
+
+    # -- synchronous entry points ------------------------------------------
+
+    def amplitude(self, name: str, bits) -> jnp.ndarray:
+        return self.amplitude_batch(name, [bits])[0]
+
+    def amplitude_batch(self, name: str, bits_batch) -> jnp.ndarray:
+        """Serve a whole amplitude batch in the calling thread.
+
+        Same cache, bucketing and compiled closes as the queued path —
+        benchmarks and bulk clients (the chi sweep of
+        ``examples/rqc_amplitude.py``) call this to skip queue latency."""
+        with self._lock:
+            entry = self._entry(name)
+            bits_arr = self._check_bits(entry, np.asarray(bits_batch,
+                                                          dtype=np.int64))
+            return self._execute_amplitudes(entry, bits_arr)
+
+    def expectation(self, name: str, obs: Observable) -> jnp.ndarray:
+        with self._lock:
+            entry = self._entry(name)
+            return self._execute_expectation(entry, obs)
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> Dict:
+        """Counters + per-state cache stats (a consistent snapshot)."""
+        with self._lock:
+            out = dict(self._counters)
+            out.setdefault("queries_amplitude", 0)
+            out.setdefault("queries_expectation", 0)
+            out.setdefault("batches", 0)
+            out.setdefault("rows_absorbed", 0)
+            out.setdefault("state_evictions", 0)
+            out.setdefault("invalidations", 0)
+            out.setdefault("padded_queries", 0)
+            per_state = {}
+            for name, entry in self._states.items():
+                st = {f"prefix_{k}": v for k, v in entry.prefix.stats().items()}
+                st["obs_env_builds"] = entry.obs_env_builds
+                st["obs_env_hits"] = entry.obs_env_hits
+                st["version"] = entry.version
+                st["materialized"] = name in self._hot
+                per_state[name] = st
+            out["per_state"] = per_state
+            out["states"] = len(self._states)
+            return out
+
+    # -- internals ----------------------------------------------------------
+
+    def _entry(self, name: str) -> _StateEntry:
+        try:
+            return self._states[name]
+        except KeyError:
+            raise KeyError(
+                f"state {name!r} is not registered (have "
+                f"{sorted(self._states)})") from None
+
+    @staticmethod
+    def _check_single(entry: _StateEntry, bits_arr: np.ndarray) -> np.ndarray:
+        """One query's bits -> (nrow, ncol); flat or grid layout accepted."""
+        n = entry.state.nrow * entry.state.ncol
+        if bits_arr.size != n:
+            raise ValueError(
+                f"bits shape {bits_arr.shape} does not match the "
+                f"{entry.state.nrow}x{entry.state.ncol} grid of "
+                f"{entry.name!r}")
+        return bits_arr.reshape(entry.state.nrow, entry.state.ncol)
+
+    @staticmethod
+    def _check_bits(entry: _StateEntry, bits_arr: np.ndarray) -> np.ndarray:
+        """A batch of queries -> (B, nrow, ncol).
+
+        Accepts ``(B, nrow, ncol)``, ``(B, nrow*ncol)`` or a single query
+        (``(nrow, ncol)`` / ``(nrow*ncol,)`` — returned with ``B == 1``).
+        A 2-D array whose total size is one grid is always read as a
+        single query, never as a batch of flat one-row queries."""
+        n = entry.state.nrow * entry.state.ncol
+        if bits_arr.ndim == 1 or bits_arr.size == n:
+            return ServingEngine._check_single(entry, bits_arr)[None]
+        B = bits_arr.shape[0]
+        if bits_arr.size != B * n:
+            raise ValueError(
+                f"bits batch shape {bits_arr.shape} does not match the "
+                f"{entry.state.nrow}x{entry.state.ncol} grid of "
+                f"{entry.name!r}")
+        return bits_arr.reshape(B, entry.state.nrow, entry.state.ncol)
+
+    def _touch(self, entry: _StateEntry) -> None:
+        """Mark a state's caches as materialized + recently used (LRU).
+
+        Evicts the least-recently-queried other state's environments when
+        more than ``max_states`` states hold materialized caches."""
+        self._hot[entry.name] = True
+        self._hot.move_to_end(entry.name)
+        while len(self._hot) > self.max_states:
+            victim_name, _ = self._hot.popitem(last=False)
+            victim = self._states.get(victim_name)
+            if victim is not None:
+                victim.prefix.clear()
+                victim.obs_envs = None
+                self._counters["state_evictions"] += 1
+
+    def _prefix_env(self, entry: _StateEntry, prefix: tuple):
+        """Boundary MPS for a bit prefix, via the LRU cache.
+
+        One counted lookup per call (the full prefix); ancestor probes and
+        intermediate-level inserts are uncounted, so stats reconcile as
+        one hit-or-miss per served query group."""
+        state, option = entry.state, entry.option
+        ncol = state.ncol
+        if len(prefix) == 0:  # one-row state: trivial boundary above row 0
+            return [jnp.ones((1, 1, 1), dtype=state.dtype)
+                    for _ in range(ncol)]
+        env = entry.prefix.get(prefix)
+        if env is not None:
+            return env
+        depth = len(prefix)
+        k = depth - 1
+        env = None
+        while k >= 1:
+            env = entry.prefix.peek(prefix[:k])
+            if env is not None:
+                break
+            k -= 1
+        if env is None:
+            k = 1
+            row0 = [state.sites[0][j][int(prefix[0][j])] for j in range(ncol)]
+            env = [t.reshape(t.shape[1], t.shape[2], t.shape[3]) for t in row0]
+            entry.prefix.put(prefix[:1], env)
+        eng = get_engine(option.engine)
+        while k < depth:
+            row = [state.sites[k][j][int(prefix[k][j])] for j in range(ncol)]
+            env = eng.absorb_onelayer(env, row, option.chi, option.svd,
+                                      entry.amp_keys[k])
+            k += 1
+            entry.prefix.put(prefix[:k], env)
+            self._counters["rows_absorbed"] += 1
+        return env
+
+    def _chunks(self, n: int) -> List[int]:
+        """Split a group of n queries into padded bucket-sized chunks."""
+        out = []
+        big = self.bucket_sizes[-1]
+        while n >= big:
+            out.append(big)
+            n -= big
+        if n > 0:
+            out.append(next(b for b in self.bucket_sizes if b >= n))
+        return out
+
+    def _execute_amplitudes(self, entry: _StateEntry,
+                            bits_arr: np.ndarray) -> jnp.ndarray:
+        """Batched amplitudes for one state (caller holds the lock)."""
+        self._touch(entry)
+        B = bits_arr.shape[0]
+        self._counters["queries_amplitude"] += B
+        groups: Dict[tuple, List[int]] = {}
+        for idx in range(B):
+            prefix = tuple(tuple(int(b) for b in row)
+                           for row in bits_arr[idx][:-1])
+            groups.setdefault(prefix, []).append(idx)
+        vals: List = [None] * B
+        row_sites = entry.state.sites[-1]
+        for prefix, idxs in groups.items():
+            env = self._prefix_env(entry, prefix)
+            final_bits = bits_arr[idxs, -1, :].astype(np.int32)
+            done = 0
+            for bucket in self._chunks(len(idxs)):
+                take = min(bucket, len(idxs) - done)
+                chunk = final_bits[done:done + take]
+                if take < bucket:  # pad by repeating the first query
+                    pad = np.broadcast_to(chunk[0], (bucket - take,
+                                                     chunk.shape[1]))
+                    chunk = np.concatenate([chunk, pad], axis=0)
+                    self._counters["padded_queries"] += bucket - take
+                out = final_row_amplitudes(env, row_sites,
+                                           jnp.asarray(chunk),
+                                           entry.state.log_scale)
+                for k in range(take):
+                    vals[idxs[done + k]] = out[k]
+                done += take
+        self._counters["batches"] += 1
+        return jnp.stack(vals)
+
+    def _obs_envs(self, entry: _StateEntry):
+        if entry.obs_envs is None:
+            entry.obs_envs = row_environments(entry.state, entry.option,
+                                              entry.env_key)
+            entry.obs_env_builds += 1
+        else:
+            entry.obs_env_hits += 1
+        return entry.obs_envs
+
+    def _execute_expectation(self, entry: _StateEntry,
+                             obs: Observable) -> jnp.ndarray:
+        self._touch(entry)
+        self._counters["queries_expectation"] += 1
+        top, bottom = self._obs_envs(entry)
+        return expectation_from_envs(entry.state, obs, top, bottom)
+
+    # -- dispatcher ---------------------------------------------------------
+
+    def _dispatch_loop(self):
+        while True:
+            try:
+                first = self._queue.get(timeout=0.1)
+            except _queuelib.Empty:
+                if self._closed:
+                    return
+                continue
+            if first is _SHUTDOWN:
+                # keep draining: requests enqueued before close() resolve.
+                if self._queue.empty():
+                    return
+                self._queue.put(_SHUTDOWN)
+                continue
+            batch = [first]
+            deadline = time.monotonic() + self.window_ms / 1e3
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=remaining)
+                except _queuelib.Empty:
+                    break
+                if nxt is _SHUTDOWN:
+                    self._queue.put(_SHUTDOWN)
+                    break
+                batch.append(nxt)
+            self._run_batch(batch)
+
+    def _run_batch(self, batch: List[_Request]):
+        """Group a dispatch cycle by (state, kind) and execute under the lock.
+
+        The state entry is resolved *here*, after the lock is taken — a
+        ``register_state`` that completed before this point is always
+        honored (cache invalidation rule), and one that raced the cycle
+        serializes against it."""
+        amp_groups: Dict[str, List[_Request]] = collections.OrderedDict()
+        exp_reqs: List[_Request] = []
+        for req in batch:
+            if req.kind == "amplitude":
+                amp_groups.setdefault(req.name, []).append(req)
+            else:
+                exp_reqs.append(req)
+        with self._lock:
+            for name, reqs in amp_groups.items():
+                try:
+                    entry = self._entry(name)
+                    bits_arr = np.stack([
+                        self._check_single(entry, r.payload) for r in reqs])
+                    vals = self._execute_amplitudes(entry, bits_arr)
+                except Exception as e:  # noqa: BLE001 — delivered per-future
+                    for r in reqs:
+                        if not r.future.cancelled():
+                            r.future.set_exception(e)
+                    continue
+                for r, v in zip(reqs, vals):
+                    if not r.future.cancelled():
+                        r.future.set_result(v)
+            for req in exp_reqs:
+                try:
+                    entry = self._entry(req.name)
+                    val = self._execute_expectation(entry, req.payload)
+                except Exception as e:  # noqa: BLE001
+                    if not req.future.cancelled():
+                        req.future.set_exception(e)
+                    continue
+                if not req.future.cancelled():
+                    req.future.set_result(val)

@@ -1,84 +1,190 @@
-"""Batched decode loop (serving example).
+"""PEPS query server: batched amplitude/observable serving CLI.
 
-Prefills a batch of prompts, then decodes greedily with the cached
-serve_step.  Sized for CPU with the smoke configs; on the production mesh
-the same code path is what dryrun.py lowers for the decode shapes.
+Stands up a :class:`repro.core.serving.ServingEngine` over one or more hot
+RQC-evolved PEPS states, fires threaded clients at it (the offline-serving
+shape: a thread-safe queue, a micro-batching dispatcher, per-state
+environment prefix caches), and reports latency percentiles, throughput,
+and the speedup over per-query cold contraction.
 
-Usage:
-    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
-        --batch 4 --prompt-len 16 --gen 16
+Usage (CPU-sized defaults):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --grid 4 --layers 8 --chi 8 --states 2 \
+        --clients 4 --queries 32 --hot-prefixes 4 --obs-every 8
+
+Each client thread submits ``--queries`` requests against randomly chosen
+registered states.  Amplitude bitstrings draw their row prefix from a
+small per-state pool of ``--hot-prefixes`` hot prefixes (the serving
+cache's intended regime — think sampling sweeps over a slice) with
+uniformly random final rows; every ``--obs-every``-th request is an
+observable query instead.  See docs/serving.md for the cache contract and
+``benchmarks/bench_serving.py`` for the pinned throughput baseline.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.launch.mesh import make_mesh, use_mesh
-from repro.models.model import build
+from repro.core import bmps as B
+from repro.core.circuits import apply_circuit_exact_peps, random_circuit
+from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+from repro.core.observable import Observable
+from repro.core.peps import computational_zeros
+from repro.core.serving import ServingEngine
+
+
+def _percentiles(lat_s):
+    lat = np.sort(np.asarray(lat_s)) * 1e3
+    if lat.size == 0:
+        return "n/a"
+    pick = lambda q: lat[min(len(lat) - 1, int(q * len(lat)))]
+    return (f"p50={pick(0.50):.2f}ms p95={pick(0.95):.2f}ms "
+            f"p99={pick(0.99):.2f}ms")
+
+
+def build_states(n_states: int, grid: int, layers: int, seed: int = 7):
+    """RQC-evolve ``n_states`` hot PEPS states (exact evolution, bond 4^(layers/4))."""
+    states = []
+    for s in range(n_states):
+        circ = random_circuit(grid, grid, layers, seed=seed + s)
+        states.append(apply_circuit_exact_peps(
+            computational_zeros(grid, grid), circ))
+    return states
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-8b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grid", type=int, default=4, help="grid side (NxN PEPS)")
+    ap.add_argument("--layers", type=int, default=8, help="RQC layers")
+    ap.add_argument("--chi", type=int, default=8, help="contraction bond dim")
+    ap.add_argument("--svd", choices=("direct", "randomized"),
+                    default="direct")
+    ap.add_argument("--engine", choices=("zipup", "variational"),
+                    default="zipup")
+    ap.add_argument("--states", type=int, default=2,
+                    help="number of hot states to register")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent client threads")
+    ap.add_argument("--queries", type=int, default=32,
+                    help="queries per client")
+    ap.add_argument("--hot-prefixes", type=int, default=4,
+                    help="per-state pool of hot row prefixes")
+    ap.add_argument("--obs-every", type=int, default=8,
+                    help="every k-th request is an observable query (0 = none)")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="dispatcher micro-batching window")
+    ap.add_argument("--max-states", type=int, default=4,
+                    help="states with materialized caches (LRU)")
+    ap.add_argument("--baseline-queries", type=int, default=8,
+                    help="cold per-query contractions for the speedup line")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    mesh = make_mesh((1, 1), ("data", "model"))
-    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    if cfg.family in ("encdec",):
-        raise SystemExit("use whisper decode via tests; serve.py targets LMs")
-    bundle = build(cfg, mesh)
-    params = bundle.init(jax.random.PRNGKey(args.seed))
+    svd = (DirectSVD() if args.svd == "direct" else
+           RandomizedSVD(niter=4, oversample=8))
+    option = B.BMPS(args.chi, svd, engine=args.engine)
 
+    t0 = time.perf_counter()
+    states = build_states(args.states, args.grid, args.layers)
+    print(f"[serve] {args.states} x {args.grid}x{args.grid} RQC states "
+          f"(bond {states[0].max_bond()}) evolved in "
+          f"{time.perf_counter()-t0:.1f}s")
+
+    engine = ServingEngine(max_states=args.max_states,
+                           window_ms=args.window_ms)
+    names = [f"rqc{s}" for s in range(len(states))]
+    for name, st in zip(names, states):
+        engine.register_state(name, st, option)
+
+    # hot prefix pools: rows 0..n-2, per state
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(
-        0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    prefix_pool = {
+        name: rng.integers(0, 2, (args.hot_prefixes, args.grid - 1, args.grid))
+        for name in names}
+    obs = Observable.Z(0) + Observable.ZZ(0, 1)
 
-    max_seq = args.prompt_len + args.gen
-    with use_mesh(mesh):
-        t0 = time.time()
-        if cfg.family in ("ssm", "hybrid"):
-            # SSM decode: feed the prompt token by token (no KV prefill)
-            cache = bundle.init_cache(args.batch, max_seq)
-            step = jax.jit(bundle.serve_step, donate_argnums=(1,))
-            logits = None
-            for i in range(args.prompt_len):
-                logits, cache = step(params, cache, prompts[:, i:i + 1])
-        else:
-            logits, cache = jax.jit(bundle.prefill_step)(params, prompts)
-            # widen cache to max_seq
-            pad = max_seq - args.prompt_len
-            cache = {k: (jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-                         if k in ("k", "v") else v) for k, v in cache.items()}
-            step = jax.jit(bundle.serve_step, donate_argnums=(1,))
-        t_prefill = time.time() - t0
+    # warm the prefix caches + compiled buckets once so the measured run
+    # reflects steady-state serving (cold-start cost is reported separately).
+    t0 = time.perf_counter()
+    for name in names:
+        warm = np.concatenate(
+            [np.concatenate([prefix_pool[name],
+                             rng.integers(0, 2, (args.hot_prefixes, 1,
+                                                 args.grid))], axis=1)],
+            axis=0)
+        engine.amplitude_batch(name, warm)
+    print(f"[serve] warmup (prefix envs + compiled closes): "
+          f"{time.perf_counter()-t0:.1f}s")
 
-        tokens = [jnp.argmax(logits, axis=-1)[:, None]]
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            positions = None
-            if cfg.family == "vlm":
-                positions = jnp.broadcast_to(cache["index"],
-                                             (3, args.batch, 1)).astype(jnp.int32)
-            logits, cache = step(params, cache, tokens[-1], positions)
-            tokens.append(jnp.argmax(logits, axis=-1)[:, None])
-        t_decode = time.time() - t0
+    amp_lat, obs_lat = [], []
+    lat_lock = threading.Lock()
 
-    out = jnp.concatenate(tokens, axis=1)
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"prefill={t_prefill*1e3:.1f}ms "
-          f"decode={t_decode/max(args.gen-1,1)*1e3:.1f}ms/tok")
-    print("[serve] generated:", np.asarray(out)[:, :10], "...")
-    return out
+    def client(cid: int):
+        crng = np.random.default_rng(1000 + cid)
+        pending = []
+        for q in range(args.queries):
+            name = names[crng.integers(len(names))]
+            if args.obs_every and (q + 1) % args.obs_every == 0:
+                t = time.perf_counter()
+                pending.append(("obs", t, engine.submit_expectation(name, obs)))
+            else:
+                prefix = prefix_pool[name][crng.integers(args.hot_prefixes)]
+                final = crng.integers(0, 2, (1, args.grid))
+                bits = np.concatenate([prefix, final], axis=0)
+                t = time.perf_counter()
+                pending.append(("amp", t, engine.submit_amplitude(name, bits)))
+        for kind, t, fut in pending:
+            fut.result(timeout=600)
+            with lat_lock:
+                (amp_lat if kind == "amp" else obs_lat).append(
+                    time.perf_counter() - t)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(args.clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    total = len(amp_lat) + len(obs_lat)
+
+    print(f"[serve] {total} queries from {args.clients} clients in "
+          f"{wall:.2f}s -> {total / wall:.1f} q/s")
+    print(f"[serve] amplitude latency ({len(amp_lat)}): "
+          f"{_percentiles(amp_lat)}")
+    if obs_lat:
+        print(f"[serve] observable latency ({len(obs_lat)}): "
+              f"{_percentiles(obs_lat)}")
+
+    # cold per-query baseline: full boundary sweep per amplitude
+    nb = args.baseline_queries
+    if nb > 0:
+        bits = np.concatenate(
+            [np.broadcast_to(prefix_pool[names[0]][0],
+                             (nb, args.grid - 1, args.grid)),
+             rng.integers(0, 2, (nb, 1, args.grid))], axis=1)
+        t0 = time.perf_counter()
+        for b in bits:
+            B.amplitude(states[0], b, option).block_until_ready()
+        cold = (time.perf_counter() - t0) / nb
+        t0 = time.perf_counter()
+        engine.amplitude_batch(names[0], bits).block_until_ready()
+        served = (time.perf_counter() - t0) / nb
+        print(f"[serve] per-query: cold contraction {cold*1e3:.2f}ms vs "
+              f"served (warm cache, batched) {served*1e3:.2f}ms "
+              f"-> x{cold / max(served, 1e-12):.1f}")
+
+    st = engine.stats()
+    flat = {k: v for k, v in st.items() if k != "per_state"}
+    print(f"[serve] stats: {flat}")
+    for name, ps in st["per_state"].items():
+        print(f"[serve]   {name}: {ps}")
+    engine.close()
+    return st
 
 
 if __name__ == "__main__":
