@@ -73,6 +73,22 @@ test-robustness:
 bench-resume:
 	PYTHONPATH=src $(PY) benchmarks/bench_resume.py
 
+# Gradient-correctness lane (ISSUE 10): AD-vs-finite-difference property
+# sweep over grids x chi x boundary engines, degenerate-spectrum SVD/QR
+# gradients, vmapped-ensemble PRNG contract, and mesh-sharded == unsharded
+# batched execution (hence the 8 forced virtual devices).
+.PHONY: test-vqe
+test-vqe:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_vqe_grad.py
+
+# adam-vs-SLSQP-vs-SPSA convergence (evals to tolerance) + batched
+# ensemble throughput on 8 virtual devices.
+.PHONY: bench-vqe
+bench-vqe:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src:. $(PY) benchmarks/bench_vqe.py
+
 # Serving lane: served-vs-per-query equivalence (property-based), threaded
 # concurrency, and cache-lifecycle (invalidation / LRU eviction) tests.
 .PHONY: test-serving

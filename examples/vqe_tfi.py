@@ -1,8 +1,16 @@
 """End-to-end driver 2: VQE on the ferromagnetic transverse-field Ising
-model (paper Section VI-D2, Fig. 14) — SLSQP over the Ry+CNOT ansatz with
-PEPS-simulated energies.
+model (paper Section VI-D2, Fig. 14) — PEPS-simulated energies over the
+Ry+CNOT ansatz.
 
     PYTHONPATH=src python examples/vqe_tfi.py [--grid 2] [--bond 2]
+
+``--method`` picks the optimizer (see docs/vqe.md): ``SLSQP`` is the
+paper's gradient-free reference; ``adam`` follows the exact JAX gradient
+through the PEPS contraction; ``spsa`` is the stochastic 2-point baseline.
+``--ensemble k`` (adam/spsa) advances k independently-seeded circuits in
+one compiled vmapped program, e.g.
+
+    PYTHONPATH=src python examples/vqe_tfi.py --method adam --ensemble 8
 """
 import argparse
 
@@ -16,6 +24,13 @@ def main():
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--bond", type=int, default=2)
     ap.add_argument("--maxiter", type=int, default=30)
+    ap.add_argument("--method", default="SLSQP",
+                    choices=["SLSQP", "adam", "spsa"])
+    ap.add_argument("--ensemble", type=int, default=1,
+                    help="parameter sets advanced in one vmapped program "
+                         "(adam/spsa only)")
+    ap.add_argument("--lr", type=float, default=0.05,
+                    help="adam learning rate")
     args = ap.parse_args()
 
     n = args.grid
@@ -28,9 +43,15 @@ def main():
     print(f"statevector VQE: E = {ref.energy:.5f}  ({ref.n_evals} evals)")
 
     res = run_vqe(n, n, obs, n_layers=args.layers, max_bond=args.bond,
-                  maxiter=args.maxiter)
-    print(f"PEPS VQE (bond {args.bond}): E = {res.energy:.5f}  "
+                  maxiter=args.maxiter, method=args.method,
+                  ensemble=args.ensemble, lr=args.lr)
+    tag = f"{args.method}, ensemble {args.ensemble}" if args.ensemble > 1 \
+        else args.method
+    print(f"PEPS VQE (bond {args.bond}, {tag}): E = {res.energy:.5f}  "
           f"({res.n_evals} evals)")
+    if res.ensemble_energies is not None:
+        print("ensemble final energies:",
+              " ".join(f"{e:.5f}" for e in res.ensemble_energies))
 
 
 if __name__ == "__main__":

@@ -51,19 +51,36 @@ def random_circuit(nrow: int, ncol: int, n_layers: int, seed: int = 0,
     return circuit
 
 
+def _ry_traced(theta):
+    """Ry(theta) as a traceable jnp expression (real 2x2; cast to the state
+    dtype downstream — the real->complex injection is differentiable)."""
+    import jax.numpy as jnp
+    c, s = jnp.cos(theta * 0.5), jnp.sin(theta * 0.5)
+    return jnp.stack([jnp.stack([c, -s]), jnp.stack([s, c])])
+
+
 def vqe_ansatz(nrow: int, ncol: int, thetas: Sequence[float]) -> Circuit:
     """Paper Section VI-D2 ansatz: repeated layers of Ry(theta) on every
     qubit followed by CNOT on all nearest-neighbour pairs.
 
-    ``thetas`` has length n_layers * nrow * ncol."""
+    ``thetas`` has length n_layers * nrow * ncol.  Accepts a plain sequence
+    / numpy array (concrete numpy gates, the historical path) **or** a JAX
+    array — including tracers, so ``jax.jit``/``jax.grad``/``jax.vmap`` of
+    an energy built on this ansatz trace through the gate angles (see
+    :func:`repro.core.vqe.vqe_energy_and_grad`)."""
+    import jax
     n = nrow * ncol
     assert len(thetas) % n == 0, "thetas must be a multiple of the qubit count"
     n_layers = len(thetas) // n
+    # numpy arrays / lists keep the bit-exact math.cos legacy gates; any
+    # jax.Array (tracer or concrete device array) gets traceable jnp gates.
+    traced = isinstance(thetas, jax.core.Tracer) or isinstance(thetas, jax.Array)
     circuit: Circuit = []
     idx = 0
     for _ in range(n_layers):
         for s in range(n):
-            circuit.append((G.RY(float(thetas[idx])), [s]))
+            ry = _ry_traced(thetas[idx]) if traced else G.RY(float(thetas[idx]))
+            circuit.append((ry, [s]))
             idx += 1
         for pair in _neighbor_pairs(nrow, ncol):
             circuit.append((G.CX, list(pair)))

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 
 from repro.core import planner
 from repro.core.rsvd import ImplicitOperator, randomized_svd
+from repro.core.svd_grad import sqrt_reg, svd_reg
 
 
 def _apply_cutoff(s: jnp.ndarray, cutoff: float) -> jnp.ndarray:
@@ -78,7 +79,10 @@ class DirectSVD:
         m, n = op.row_size, op.col_size
         rank = min(rank, m, n)
         mat = theta.reshape(m, n)
-        u, s, vh = jnp.linalg.svd(mat, full_matrices=False)
+        # svd_reg: forward bit-identical to jnp.linalg.svd, JVP regularized
+        # for (near-)degenerate / zero singular values (core/svd_grad.py) —
+        # this seam is what jax.grad(vqe_energy_peps) differentiates through.
+        u, s, vh = svd_reg(mat)
         u, s, vh = u[:, :rank], s[:rank], vh[:rank]
         s = _apply_cutoff(s, self.cutoff)
         return (
@@ -171,7 +175,9 @@ def absorb_factors(u: jnp.ndarray, s: jnp.ndarray, v: jnp.ndarray,
     put all of ``s`` on one side.  ``u``'s LAST and ``v``'s FIRST axis are
     the shared bond."""
     if absorb == "both":
-        sq = jnp.sqrt(s)
+        # sqrt_reg == jnp.sqrt forward; its derivative at the exact zeros of
+        # a rank-deficient bond is the (finite) symmetric subgradient 0.
+        sq = sqrt_reg(s)
         return u * sq, sq[(slice(None),) + (None,) * (v.ndim - 1)] * v
     if absorb == "left":
         return u * s, v

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core import planner
 from repro.core.engines import BoundaryEngine, register_engine
+from repro.core.svd_grad import qr_reg
 
 
 def _fused(tag: str, builder, *tensors):
@@ -69,10 +70,15 @@ def _fused(tag: str, builder, *tensors):
 
 def _qr_shift_right(b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """QR of ``b`` matricized as (left+dangles, right): returns
-    (left-orthonormal Q with b's layout, r to absorb rightwards)."""
+    (left-orthonormal Q with b's layout, r to absorb rightwards).
+
+    ``qr_reg`` == ``jnp.linalg.qr`` forward; its ridge-regularized JVP is
+    what keeps ``jax.grad`` through a variational-engine contraction from
+    compounding ``1/sigma_min`` noise across the ALS sweeps (the canonical-
+    shift QRs see the numerically rank-deficient bonds of circuit states)."""
     m = b.shape[-1]
     mat = b.reshape(-1, m)
-    q, r = jnp.linalg.qr(mat)
+    q, r = qr_reg(mat)
     return q.reshape(b.shape[:-1] + (q.shape[-1],)), r
 
 
@@ -81,7 +87,7 @@ def _lq_shift_left(b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     (r to absorb leftwards, right-orthonormal Q with b's layout)."""
     a = b.shape[0]
     mat = b.reshape(a, -1)
-    qh, rh = jnp.linalg.qr(mat.conj().T)
+    qh, rh = qr_reg(mat.conj().T)
     q = qh.conj().T            # (k, dangles*right), right-orthonormal rows
     r = rh.conj().T            # (a, k)
     return r, q.reshape((q.shape[0],) + b.shape[1:])

@@ -11,6 +11,14 @@
 Two-site terms are split ``G = sum_k L_k (x) R_k`` (an exact operator-SVD
 with bond kappa <= 4) so any geometry — horizontal, vertical, or diagonal
 within two adjacent rows — reduces to a uniform column sweep.
+
+Differentiability: the whole evaluation is traceable — the only numpy in
+the hot path (:func:`split_two_site`, the key folding) operates on the
+*constant* observable matrices and site indices, never on traced state
+tensors, so ``jax.grad`` of an energy w.r.t. circuit parameters flows
+through :func:`expectation` unimpeded (the einsumsvd truncations inside the
+environment sweeps differentiate via :mod:`repro.core.svd_grad`).  See
+``docs/vqe.md`` and :func:`repro.core.vqe.vqe_energy_and_grad`.
 """
 from __future__ import annotations
 

@@ -15,6 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.svd_grad import eigh_reg
 from repro.kernels import dispatch as _dispatch
 
 _EPS = {jnp.float32.dtype: 1e-6, jnp.float64.dtype: 1e-13,
@@ -173,7 +174,12 @@ def gram_qr(a: jnp.ndarray, n_small: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     # G_{cc'} = sum_big conj(A)_{big,c} A_{big,c'} — contraction, no reshape of A
     # (or the Pallas streaming-Gram kernel when the operand qualifies).
     g_mat = _gram_matrix(a, big_axes, nbig, nsmall)  # small, local
-    lam, x = jnp.linalg.eigh(g_mat)
+    # eigh_reg == jnp.linalg.eigh forward; its regularized JVP keeps the
+    # gradient finite when G is rank-deficient (clusters of exactly zero
+    # eigenvalues — the squared singular values of a padded bond).  The
+    # eps clamp below additionally stops the gradient through the noise
+    # directions (jnp.maximum passes the gradient to the clamp side).
+    lam, x = eigh_reg(g_mat)
     eps = _eps_for(a.dtype) * jnp.maximum(jnp.max(jnp.abs(lam)), 1.0)
     lam = jnp.maximum(lam.real, eps)
     sqrt_lam = jnp.sqrt(lam)

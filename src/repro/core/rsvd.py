@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import planner
 from repro.core.orthogonalize import orthogonalize_cols, tall_project
+from repro.core.svd_grad import svd_reg
 
 _ALL_LABELS = string.ascii_letters
 
@@ -140,6 +141,16 @@ def randomized_svd(
     rank = min(rank, max_rank)
     k = min(rank + oversample, max_rank)
 
+    # Differentiation contract: the random sketch is a PRNG constant
+    # (stop_gradient territory by construction — it carries no dependence
+    # on the operator), but the power iteration itself IS differentiated:
+    # every orthogonalization routes through the regularized Gram-QR chain
+    # (eigh_reg + the eps clamp in core/orthogonalize.py), so the tangent
+    # of the converged range basis P tracks how A's row space rotates under
+    # dA.  Stopping the gradient at P instead would amputate exactly the
+    # rank-growing components of dA (the part of the perturbation that
+    # leaves the captured range) — measured as a 100% loss on some VQE
+    # gradient components (see docs/vqe.md and tests/test_vqe_grad.py).
     q = _random_sketch(key, op.col_shape + (k,), op.dtype)
     p = orthogonalize_cols(op.matvecs(q))
     for _ in range(n_iter):
@@ -152,7 +163,8 @@ def randomized_svd(
         from repro.core.orthogonalize import gram_qr
         q_t, r_t = gram_qr(t, 1)                     # q_t: col+(k,), r_t: (k,k)
         # A ~= P T^H = P (q_t r_t)^H = P r_t^H q_t^H
-        u_small, s, vh_small = jnp.linalg.svd(r_t.conj().T)   # k x k, local
+        # (svd_reg == jnp.linalg.svd forward; regularized JVP.)
+        u_small, s, vh_small = svd_reg(r_t.conj().T)          # k x k, local
         u_small, s, vh_small = u_small[:, :rank], s[:rank], vh_small[:rank]
         # Final projections: tall operand x small matrix — the tall-apply
         # kernel site (dense path is the exact pre-kernel tensordot).
@@ -162,7 +174,7 @@ def randomized_svd(
         v = jnp.moveaxis(v, -1, 0)
         return u, s, v
     b = t.conj().reshape(op.col_size, k).T           # (k, ncol)
-    u_small, s, vh = jnp.linalg.svd(b, full_matrices=False)
+    u_small, s, vh = svd_reg(b)
     u_small, s, vh = u_small[:, :rank], s[:rank], vh[:rank]
     u = tall_project(p, u_small, 1)                  # row_shape+(rank,)
     v = vh.reshape((rank,) + op.col_shape)

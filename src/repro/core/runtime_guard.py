@@ -407,6 +407,26 @@ def bond_recovered(guard: RuntimeGuard, cause: str) -> None:
 
 
 @contextlib.contextmanager
+def suspended():
+    """Temporarily deactivate the per-solve guard stack.
+
+    The per-solve detector (:func:`_detect_svd`) host-syncs the factors,
+    which is illegal inside ``jax.grad``/``jit``/``vmap`` tracing — so the
+    gradient path (:func:`repro.core.vqe.vqe_energy_and_grad` and the
+    batched drivers) traces its evaluations with the stack suspended and
+    guards at *evaluation* granularity instead: host-check the (energy,
+    gradient) output, replay the whole evaluation one ladder rung more
+    conservative on failure.  The stack is restored on exit, so per-solve
+    guarding of any surrounding host-driven code is untouched."""
+    saved = _STACK[:]
+    del _STACK[:]
+    try:
+        yield
+    finally:
+        _STACK[:] = saved
+
+
+@contextlib.contextmanager
 def maybe(guard: Optional[RuntimeGuard]):
     """``with maybe(resolve(guard)):`` — nullcontext when guard is None."""
     if guard is None:

@@ -90,6 +90,39 @@ def peps_shardings(state_or_specs, mesh: Mesh, batched: bool = True,
         lambda t: site_sharding(mesh, t.shape, batched, mode), state_or_specs)
 
 
+def ensemble_sharding(mesh: Mesh, ensemble: int, ndim: int) -> NamedSharding:
+    """Sharding of an ``(ensemble, ...)`` member-batched array.
+
+    Shards the leading member axis over **all** mesh axes when ``ensemble``
+    is divisible by the total device count (the pure data-parallel regime of
+    a vmapped VQE/ITE ensemble — e.g. ``peps_mesh(cols, batch)`` with
+    ``ensemble == cols * batch``); otherwise over the trailing mesh axis
+    that divides it; otherwise fully replicated.  Trailing array axes are
+    never sharded — each member's parameter vector lives whole on its
+    device, only the member axis is split."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for s in sizes.values():
+        total *= s
+    rest = [None] * (ndim - 1)
+    if total > 1 and ensemble % total == 0:
+        return NamedSharding(mesh, P(tuple(mesh.axis_names), *rest))
+    for a in reversed(mesh.axis_names):
+        if sizes[a] > 1 and ensemble % sizes[a] == 0:
+            return NamedSharding(mesh, P(a, *rest))
+    return NamedSharding(mesh, P(*([None] * ndim)))
+
+
+def shard_ensemble(tree, mesh: Mesh, ensemble: int):
+    """``device_put`` every ``(ensemble, ...)`` leaf of an optimizer-state
+    pytree with :func:`ensemble_sharding` — jit/GSPMD propagates the member
+    partitioning through the vmapped step, so ``run_vqe(..., ensemble=k,
+    mesh=...)`` advances many circuits x many devices in one program."""
+    return jax.tree_util.tree_map(
+        lambda v: jax.device_put(
+            v, ensemble_sharding(mesh, ensemble, max(v.ndim, 1))), tree)
+
+
 def abstract_ensemble(cfg: PEPSConfig):
     """ShapeDtypeStruct PEPS ensemble (no allocation) for the dry-run."""
     proto = random_peps(cfg.nrow, cfg.ncol, cfg.bond, jax.random.PRNGKey(0),

@@ -1,29 +1,55 @@
 """Variational quantum eigensolver simulation (paper Section VI-D2).
 
 The ansatz is the paper's: layers of Ry rotations on every qubit followed by
-CNOTs on all nearest-neighbour pairs; the optimizer is SLSQP (as in the
-paper, via scipy) over the PEPS-simulated energy
-``E(theta) = <psi(theta)|H|psi(theta)>``.  An SPSA optimizer is provided as
-a derivative-free alternative.
+CNOTs on all nearest-neighbour pairs.  Three optimizer families drive the
+PEPS-simulated energy ``E(theta) = <psi(theta)|H|psi(theta)>``:
+
+* **SLSQP** (the paper's choice, via scipy) — one sequential, host-round-trip
+  energy evaluation at a time;
+* **SPSA** — derivative-free; sequential (``ensemble=1``, the historical
+  numpy-Generator driver, bit-identical resume) or **vmapped**
+  (``ensemble=k``: k perturbation pairs advance in one compiled program);
+* **adam** (``method="adam"``) — first-order gradient descent on the *exact*
+  JAX gradient of the PEPS energy, powered by :mod:`repro.optim.adamw`;
+  always batched (``ensemble`` parameter sets advance in one compiled
+  vmapped program, ``ensemble=1`` is the same program with a unit batch).
+
+Differentiability (this file's beyond-paper core): :func:`vqe_energy_peps`
+is a pure, traceable JAX function — ``jax.grad``/``jit``/``vmap`` compose
+through the ansatz gates, every einsumsvd truncation (the regularized SVD
+gradient of :mod:`repro.core.svd_grad`), and the boundary contraction.
+:func:`vqe_energy_and_grad` is the jit-compiled ``value_and_grad``, cached
+per network signature in the planner's fused cache.  See ``docs/vqe.md``
+for the differentiability contract and the optimizer decision table.
+
+Ensembles compose with device meshes: pass ``mesh=peps_mesh(cols, batch)``
+(or any mesh) and the member axis of a batched run is sharded across the
+mesh's devices (:func:`repro.core.sharding.shard_ensemble`) — many circuits
+x many devices in one compiled program.
 
 Production hardening (see ``docs/robustness.md``):
 
-* ``checkpoint_dir=``/``checkpoint_every=`` (in energy *evaluations*)
-  snapshot the optimizer state through
-  :class:`repro.checkpoint.manager.CheckpointManager`.  SPSA resumes
-  **bit-identically**: the checkpoint carries the parameter vector, the
-  iteration index, the history, and the full numpy Generator state (as a
-  JSON leaf), so the perturbation stream continues exactly where the
-  killed run left it.  SLSQP keeps its state inside scipy, so its resume
-  is a documented *warm restart*: the optimizer restarts from the best
-  checkpointed parameters (energies re-converge; the eval trace is not
-  replayed bit-for-bit).
-* ``guard=`` activates the runtime guard over every energy evaluation —
-  each evaluation contracts hundreds of einsumsvd truncations; the
-  structured :class:`GuardReport` lands in ``VQEResult.guard``.
+* ``checkpoint_dir=``/``checkpoint_every=`` snapshot the optimizer state
+  through :class:`repro.checkpoint.manager.CheckpointManager`.  Sequential
+  SPSA resumes **bit-identically** (the snapshot carries the full numpy
+  Generator state); batched adam/SPSA runs also resume bit-identically —
+  their PRNG streams are *stateless* (keys derived from ``(seed,
+  iteration, member)``), so the snapshot only needs parameters, moments
+  and the iteration index.  SLSQP keeps its state inside scipy, so its
+  resume is a documented *warm restart*.
+* ``guard=`` activates the runtime guard.  Host-driven evaluations
+  (SLSQP/sequential SPSA) guard every einsumsvd solve individually;
+  gradient-mode and vmapped evaluations cannot host-sync per solve, so
+  they guard at **evaluation granularity**: the traced step runs with the
+  per-solve stack suspended, its output is host-checked, and a non-finite
+  energy/gradient replays the whole evaluation one escalation-ladder rung
+  more conservative (exact SVD -> exact precision -> dense kernels) —
+  a fault injected inside a grad-mode evaluation escalates instead of
+  surfacing as a NaN gradient (``tests/test_runtime_guard.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 from typing import Callable, List, Optional
@@ -32,31 +58,187 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import planner, runtime_guard
+from repro.core import faults, planner, runtime_guard
 from repro.core import statevector as sv
 from repro.core.bmps import BMPS
 from repro.core.circuits import apply_circuit_peps, apply_circuit_statevector, vqe_ansatz
 from repro.core.expectation import expectation
 from repro.core.observable import Observable
 from repro.core.peps import QRUpdate, computational_zeros
+from repro.optim.adamw import OptConfig, adamw_update
+
+#: Seed of the PRNG key the energy functions use when called with
+#: ``key=None`` (the einsumsvd sketch stream of the circuit application).
+DEFAULT_VQE_KEY_SEED = 77
 
 
 def vqe_energy_peps(thetas, nrow: int, ncol: int, obs: Observable,
-                    update: QRUpdate, contract: BMPS, key=None) -> float:
-    """Energy of the ansatz state simulated with PEPS."""
+                    update: QRUpdate, contract: BMPS, key=None) -> jnp.ndarray:
+    """Energy of the ansatz state simulated with PEPS.
+
+    Pure and traceable: ``thetas`` may be a numpy array (concrete gates,
+    the historical path) or any JAX array/tracer — ``jax.grad``, ``jit``
+    and ``vmap`` compose through the whole evaluation.  Returns a real
+    scalar ``jnp.ndarray`` (host-cast, if wanted, is the caller's job —
+    :func:`run_vqe` does it at its API boundary)."""
     if key is None:
-        key = jax.random.PRNGKey(77)
-    circuit = vqe_ansatz(nrow, ncol, np.asarray(thetas))
+        key = jax.random.PRNGKey(DEFAULT_VQE_KEY_SEED)
+    circuit = vqe_ansatz(nrow, ncol, thetas)
     state = computational_zeros(nrow, ncol)
     state = apply_circuit_peps(state, circuit, update, key)
-    return float(jnp.real(expectation(state, obs, contract, use_cache=True)))
+    return jnp.real(expectation(state, obs, contract, use_cache=True))
 
 
-def vqe_energy_statevector(thetas, nrow: int, ncol: int, obs: Observable) -> float:
-    circuit = vqe_ansatz(nrow, ncol, np.asarray(thetas))
+def vqe_energy_statevector(thetas, nrow: int, ncol: int,
+                           obs: Observable) -> jnp.ndarray:
+    """Exact statevector reference energy — traceable like the PEPS path
+    (the exact-chi gradient oracle of ``tests/test_vqe_grad.py``)."""
+    circuit = vqe_ansatz(nrow, ncol, thetas)
     vec = apply_circuit_statevector(sv.zeros(nrow * ncol), circuit)
-    return float(jnp.real(sv.expectation(vec, obs.as_tuples())))
+    return jnp.real(sv.expectation(vec, obs.as_tuples()))
 
+
+# ---------------------------------------------------------------------------
+# The differentiable seam: jit-compiled value_and_grad, guarded evaluations
+# ---------------------------------------------------------------------------
+
+def _obs_signature(obs: Observable) -> tuple:
+    """Hashable identity of an observable for the fused-cache key."""
+    return tuple((tuple(t.sites), np.asarray(t.matrix).tobytes(),
+                  complex(t.coeff)) for t in obs)
+
+
+def _grad_signature(nrow: int, ncol: int, n_params: int, obs: Observable,
+                    update, contract) -> tuple:
+    """Every trace-time decision of a gradient evaluation: the lattice, the
+    parameter count, the observable, the (frozen-dataclass) option configs,
+    the kernel-dispatch state and the device backend."""
+    from repro.kernels import dispatch
+    return (nrow, ncol, n_params, _obs_signature(obs), repr(update),
+            repr(contract), dispatch.backend_signature(),
+            jax.default_backend())
+
+
+def _all_finite(tree) -> bool:
+    """Host-side finiteness check over a pytree of arrays (one sync)."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not bool(np.all(np.isfinite(np.asarray(leaf)))):
+            return False
+    return True
+
+
+def _grad_ladder(update: QRUpdate, contract: BMPS):
+    """Evaluation-granularity escalation rungs: ``(rung, update, contract,
+    force_dense)``, cumulative — the grad-path mirror of
+    :func:`repro.core.runtime_guard._ladder` (which escalates per *solve*;
+    a traced evaluation must swap options for the whole re-trace)."""
+    from repro.core.einsumsvd import DirectSVD, RandomizedSVD
+    from repro.core.precision import PrecisionWrapped
+
+    def base(opt):
+        return opt.inner if isinstance(opt, PrecisionWrapped) else opt
+
+    rungs = []
+    upd, con = update, contract
+    u_base, c_base = base(upd.svd), base(con.svd)
+    if isinstance(u_base, RandomizedSVD) or isinstance(c_base, RandomizedSVD):
+        def to_direct(b):
+            return DirectSVD(cutoff=getattr(b, "cutoff", 0.0)) \
+                if isinstance(b, RandomizedSVD) else b
+        upd = dataclasses.replace(
+            upd, svd=(PrecisionWrapped(to_direct(u_base), upd.svd.policy)
+                      if isinstance(upd.svd, PrecisionWrapped)
+                      else to_direct(u_base)))
+        con = dataclasses.replace(con, svd=to_direct(c_base))
+        rungs.append(("exact_svd", upd, con, False))
+    if isinstance(upd.svd, PrecisionWrapped) or \
+            isinstance(con.svd, PrecisionWrapped):
+        upd = dataclasses.replace(upd, svd=base(upd.svd))
+        con = dataclasses.replace(con, svd=base(con.svd), precision="exact")
+        rungs.append(("exact_precision", upd, con, False))
+    rungs.append(("dense_kernel", upd, con, True))
+    return rungs
+
+
+def _escalate(run: Callable, active_guard, update: QRUpdate, contract: BMPS,
+              site: str = "vqe_grad"):
+    """Run ``run(update, contract, force_dense)`` under the evaluation-level
+    guard: return its output when finite (or unguarded), else walk the
+    ladder — same counters/report/exhaustion contract as the per-solve
+    guard, at whole-evaluation granularity."""
+    out = run(update, contract, False)
+    if active_guard is None or _all_finite(out):
+        return out
+    config, report = active_guard.config, active_guard.report
+    report.tick("guard_nan_events")
+    report.record(runtime_guard.GuardEvent(site, "nan", 0, "detected"))
+    rungs = _grad_ladder(update, contract)
+    attempts = 0
+    for rung, upd, con, force_dense in rungs[:config.max_retries]:
+        attempts += 1
+        report.tick("guard_retries")
+        report.tick(f"guard_rung_{rung}")
+        report.record(runtime_guard.GuardEvent(site, "nan", attempts,
+                                               f"retry:{rung}"))
+        out = run(upd, con, force_dense)
+        if _all_finite(out):
+            report.tick("guard_recovered")
+            report.record(runtime_guard.GuardEvent(site, "nan", attempts,
+                                                   f"recovered:{rung}"))
+            return out
+    report.tick("guard_exhausted")
+    report.record(runtime_guard.GuardEvent(site, "nan", attempts,
+                                           "exhausted"))
+    raise runtime_guard.GuardExhaustedError(site, "nan", attempts,
+                                            list(active_guard.report.events))
+
+
+def vqe_energy_and_grad(thetas, nrow: int, ncol: int, obs: Observable,
+                        update: QRUpdate, contract: BMPS, key=None, *,
+                        guard=None):
+    """``(E(theta), dE/dtheta)`` of the PEPS energy — jit + ``jax.grad``.
+
+    The fast path compiles ``jax.value_and_grad(vqe_energy_peps)`` once per
+    network signature and replays it from the planner's fused cache (the
+    whole optimization loop reuses one executable).  With a guard active
+    (``guard=`` or an ambient :class:`repro.core.runtime_guard.RuntimeGuard`)
+    or faults armed, evaluations run eagerly — a fresh trace per call, so
+    fault sites are consulted per evaluation and never baked into a cached
+    executable — and are guarded at evaluation granularity (module
+    docstring): a non-finite energy/gradient escalates through the ladder
+    instead of propagating NaN.  Unguarded with faults armed, the
+    corruption propagates (the documented unguarded contract)."""
+    if key is None:
+        key = jax.random.PRNGKey(DEFAULT_VQE_KEY_SEED)
+    thetas = jnp.asarray(thetas, dtype=jnp.float64)
+    active = runtime_guard.resolve(guard) or runtime_guard.current()
+    if active is None and not faults.active():
+        sig = _grad_signature(nrow, ncol, int(thetas.shape[0]), obs,
+                              update, contract)
+
+        def build():
+            def f(th, k):
+                return vqe_energy_peps(th, nrow, ncol, obs, update,
+                                       contract, key=k)
+            return jax.jit(jax.value_and_grad(f))
+        return planner.fused_fn("vqe_grad", sig, build)(thetas, key)
+
+    def run(upd, con, force_dense):
+        from repro.kernels import dispatch
+
+        def f(th):
+            return vqe_energy_peps(th, nrow, ncol, obs, upd, con, key=key)
+        with runtime_guard.suspended():
+            ctx = dispatch.forced_dense() if force_dense \
+                else contextlib.nullcontext()
+            with ctx:
+                return jax.value_and_grad(f)(thetas)
+    return _escalate(run, active, update, contract)
+
+
+# ---------------------------------------------------------------------------
+# Results / checkpoint snapshots
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class VQEResult:
@@ -71,6 +253,15 @@ class VQEResult:
     guard: Optional[runtime_guard.GuardReport] = None
     # the checkpoint step (evaluation count) this run resumed from, or None
     resumed_from: Optional[int] = None
+    # batched runs only (method="adam" or SPSA with ensemble>1): final
+    # parameters (ensemble, P), final energies (ensemble,), and the
+    # per-iteration per-member energy trace (iterations, ensemble).
+    # ``thetas``/``energy``/``history`` then hold the best member / the
+    # per-iteration best, so sequential consumers read batched results
+    # unchanged.
+    ensemble_thetas: Optional[np.ndarray] = None
+    ensemble_energies: Optional[np.ndarray] = None
+    ensemble_history: Optional[np.ndarray] = None
 
 
 def _vqe_snapshot(x: np.ndarray, k: int, history: List[float],
@@ -90,6 +281,187 @@ def _vqe_snapshot(x: np.ndarray, k: int, history: List[float],
     return tree
 
 
+def _batched_snapshot(state: dict, k: int, ehist: List[np.ndarray],
+                      ensemble: int, planner_delta: dict) -> dict:
+    """Snapshot of a batched run.  No RNG state: the PRNG streams are
+    stateless (keys derived from ``(seed, iteration, member)``), so the
+    parameters + adam moments + the iteration index replay the trajectory
+    bit-identically."""
+    hist = (np.asarray(ehist, dtype=np.float64) if ehist
+            else np.zeros((0, ensemble), dtype=np.float64))
+    return {
+        "x": np.asarray(state["x"], dtype=np.float64),
+        "mu": np.asarray(state["mu"], dtype=np.float64),
+        "nu": np.asarray(state["nu"], dtype=np.float64),
+        "count": np.asarray(state["count"], dtype=np.int32),
+        "k": np.asarray(k, dtype=np.int64),
+        "ehist": hist.reshape(len(ehist), ensemble),
+        "meta_json": np.array(json.dumps(
+            {"planner_delta": planner_delta, "format": "batched-v1"})),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The batched drivers (vmapped adam / SPSA ensembles)
+# ---------------------------------------------------------------------------
+
+#: SPSA gain schedule (shared by the sequential and the batched driver):
+#: a_k = a0/(1+k)^0.602, c_k = c0/(1+k)^0.101 (Spall's standard exponents).
+SPSA_GAINS = (0.15, 0.12)
+
+
+def _member_init(seed: int, ensemble: int, n_params: int) -> jnp.ndarray:
+    """Member-keyed initial angles: member ``i`` draws from
+    ``fold_in(PRNGKey(seed), i)`` — independent of the ensemble size, so
+    member i of any ensemble starts identically (the shared PRNG
+    contract)."""
+    base = jax.random.PRNGKey(seed)
+
+    def one(i):
+        return jax.random.uniform(jax.random.fold_in(base, i),
+                                  (n_params,), jnp.float64, -0.1, 0.1)
+    return jax.vmap(one)(jnp.arange(ensemble))
+
+
+def _build_batched_step(method: str, nrow: int, ncol: int, obs: Observable,
+                        update: QRUpdate, contract: BMPS, seed: int,
+                        cfg: OptConfig):
+    """One optimizer iteration advancing every ensemble member, as a pure
+    function ``step(state, k) -> (state, energies)`` suitable for jit.
+
+    ``state`` is ``{"x": (ens, P), "mu": (ens, P), "nu": (ens, P),
+    "count": (ens,)}`` (SPSA carries zero moments so both methods share one
+    checkpoint layout).  ``k`` is the *global* iteration index, traced — one
+    compiled program serves every iteration, and the SPSA perturbation key
+    ``fold_in(fold_in(spsa_base, k), member)`` depends only on (seed, k,
+    member): resume and ensemble-size changes never shift a member's
+    stream."""
+    energy_key = jax.random.PRNGKey(DEFAULT_VQE_KEY_SEED)
+
+    def energy(th):
+        return vqe_energy_peps(th, nrow, ncol, obs, update, contract,
+                               key=energy_key)
+
+    if method == "adam":
+        vg = jax.value_and_grad(energy)
+
+        def member(xi, mi, vi, ci, k, i):
+            del k, i
+            e, g = vg(xi)
+            st = {"mu": mi, "nu": vi, "count": ci}
+            nx, nst, _ = adamw_update(g, st, xi, cfg)
+            return nx, nst["mu"], nst["nu"], nst["count"], e
+    else:  # vmapped SPSA
+        a0, c0 = SPSA_GAINS
+        spsa_base = jax.random.fold_in(jax.random.PRNGKey(seed), 0x5B5A)
+
+        def member(xi, mi, vi, ci, k, i):
+            kk = jax.random.fold_in(jax.random.fold_in(spsa_base, k), i)
+            delta = jax.random.rademacher(
+                kk, xi.shape, jnp.int32).astype(jnp.float64)
+            kf = k.astype(jnp.float64)
+            ak = a0 / (1.0 + kf) ** 0.602
+            ck = c0 / (1.0 + kf) ** 0.101
+            gplus = energy(xi + ck * delta)
+            gminus = energy(xi - ck * delta)
+            ghat = (gplus - gminus) / (2.0 * ck) * delta
+            return xi - ak * ghat, mi, vi, ci + 1, 0.5 * (gplus + gminus)
+
+    def step(state, k):
+        idx = jnp.arange(state["x"].shape[0])
+        nx, nm, nv, nc, e = jax.vmap(
+            member, in_axes=(0, 0, 0, 0, None, 0))(
+                state["x"], state["mu"], state["nu"], state["count"], k, idx)
+        return {"x": nx, "mu": nm, "nu": nv, "count": nc}, e
+    return step
+
+
+def _run_batched(nrow, ncol, obs, n_layers, maxiter, seed, method, update,
+                 contract, ensemble, mesh, cfg, active_guard, manager,
+                 checkpoint_every, resume, callback, current_delta,
+                 prior_delta_box):
+    """Drive a batched (vmapped, optionally mesh-sharded) adam/SPSA run.
+
+    Returns ``(state, ehist, start_k, resumed_from)`` after ``maxiter``
+    iterations; the caller turns it into a :class:`VQEResult`."""
+    n_params = n_layers * nrow * ncol
+    x0 = _member_init(seed, ensemble, n_params)
+    zeros = jnp.zeros((ensemble, n_params), jnp.float64)
+    state = {"x": x0, "mu": zeros, "nu": jnp.zeros_like(zeros),
+             "count": jnp.zeros((ensemble,), jnp.int32)}
+    ehist: List[np.ndarray] = []
+    start_k = 0
+    resumed_from = None
+    if manager is not None and resume:
+        latest = manager.latest_step()
+        if latest is not None:
+            flat = manager.load(latest)
+            if "ehist" not in flat:
+                raise ValueError(
+                    f"checkpoint step {latest} is not from a batched VQE "
+                    f"run (sequential SPSA/SLSQP snapshot?) — pass "
+                    f"resume=False or a fresh checkpoint_dir")
+            state = {"x": jnp.asarray(flat["x"]),
+                     "mu": jnp.asarray(flat["mu"]),
+                     "nu": jnp.asarray(flat["nu"]),
+                     "count": jnp.asarray(flat["count"])}
+            start_k = int(flat["k"])
+            ehist = [np.asarray(row) for row in flat["ehist"]]
+            meta = json.loads(str(flat["meta_json"][()]))
+            prior_delta_box.update(meta.get("planner_delta") or {})
+            resumed_from = latest
+
+    if mesh is not None:
+        from repro.core.sharding import shard_ensemble
+        state = shard_ensemble(state, mesh, ensemble)
+
+    fast = active_guard is None and not faults.active()
+    if fast:
+        sig = ("step", method, ensemble, seed, repr(cfg),
+               ) + _grad_signature(nrow, ncol, n_params, obs, update,
+                                   contract)
+        step = planner.fused_fn(
+            "vqe_batched", sig,
+            lambda: jax.jit(_build_batched_step(
+                method, nrow, ncol, obs, update, contract, seed, cfg)))
+    else:
+        # Guard/fault mode: eager steps (fresh trace per call — fault sites
+        # consulted per evaluation, nothing corrupt is baked into a cached
+        # executable), escalated at evaluation granularity via _escalate.
+        def step(st, k):
+            def run(upd, con, force_dense):
+                from repro.kernels import dispatch
+                fn = _build_batched_step(method, nrow, ncol, obs, upd, con,
+                                         seed, cfg)
+                with runtime_guard.suspended():
+                    ctx = dispatch.forced_dense() if force_dense \
+                        else contextlib.nullcontext()
+                    with ctx:
+                        return fn(st, k)
+            return _escalate(run, active_guard, update, contract)
+
+    for k in range(start_k, maxiter):
+        state, e = step(state, jnp.asarray(k, jnp.int32))
+        e_host = np.asarray(e, dtype=np.float64)
+        ehist.append(e_host)
+        if callback is not None:
+            best = int(np.argmin(e_host))
+            callback(len(ehist), float(e_host[best]),
+                     np.asarray(state["x"][best]))
+        if manager is not None and checkpoint_every > 0 \
+                and (k + 1) % checkpoint_every == 0:
+            # saved AFTER iteration k: resume continues at k+1; stateless
+            # (seed, iteration, member)-keyed PRNG -> bit-identical replay
+            manager.save(k + 1, _batched_snapshot(
+                {kk: np.asarray(v) for kk, v in state.items()},
+                k + 1, ehist, ensemble, current_delta()))
+    return state, ehist, start_k, resumed_from
+
+
+# ---------------------------------------------------------------------------
+# run_vqe: the public driver
+# ---------------------------------------------------------------------------
+
 def run_vqe(
     nrow: int,
     ncol: int,
@@ -103,6 +475,9 @@ def run_vqe(
     method: str = "SLSQP",
     svd: Optional[object] = None,
     *,
+    ensemble: int = 1,
+    mesh=None,
+    lr: float = 0.05,
     guard=None,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 0,
@@ -119,17 +494,26 @@ def run_vqe(
     evaluation replays the same network signatures, so the planner cache
     amortizes compilation across the whole optimization); default DirectSVD.
 
+    ``method`` selects the optimizer: ``"SLSQP"`` (scipy, the paper's),
+    ``"spsa"``, or ``"adam"`` (exact JAX gradient + :mod:`repro.optim.adamw`
+    with ``weight_decay=0`` and learning rate ``lr``).  ``ensemble=k``
+    (adam, or SPSA with k>1) advances k parameter sets in one compiled
+    vmapped program — member ``i``'s PRNG streams depend only on ``(seed,
+    iteration, i)``, so any member of any ensemble size replays the
+    ``ensemble=1`` run of the same member index.  ``mesh=`` shards the
+    member axis across devices (e.g. ``launch.mesh.peps_mesh(cols, batch)``)
+    — ``checkpoint_*``/``resume`` snapshot and bit-identically resume
+    batched runs too (counted in optimizer *iterations*).
+
     ``guard`` activates the runtime guard (see module docstring);
     ``checkpoint_dir`` + ``checkpoint_every=N`` (counted in energy
-    evaluations) snapshot the optimizer state, and ``resume=True`` picks up
-    from the latest checkpoint (SPSA bit-identical, SLSQP warm restart).
-    ``callback(n_evals, energy, x)`` fires after every evaluation.
+    evaluations for the sequential drivers) snapshot the optimizer state,
+    and ``resume=True`` picks up from the latest checkpoint (SPSA/batched
+    bit-identical, SLSQP warm restart).  ``callback(n_evals, energy, x)``
+    fires after every evaluation (batched: after every iteration, with the
+    best member's energy/parameters).
     """
-    from scipy import optimize
-
     n = nrow * ncol
-    rng = np.random.default_rng(seed)
-    x0 = rng.uniform(-0.1, 0.1, size=n_layers * n)
     history: List[float] = []
     planner_before = planner.stats()
     prior_planner_delta: dict = {}
@@ -141,25 +525,24 @@ def run_vqe(
         update = QRUpdate(rank=max_bond, svd=svd)
         contract = BMPS(chi, svd=svd)
 
-    is_spsa = method.lower() == "spsa"
+    method_l = method.lower()
+    is_spsa = method_l == "spsa"
+    is_adam = method_l == "adam"
+    batched = is_adam or (is_spsa and ensemble > 1)
+    if ensemble > 1 and not batched:
+        raise ValueError(
+            f"ensemble={ensemble} needs a batched driver — method='adam' "
+            f"or 'spsa' (got method={method!r})")
+    if batched and backend != "peps":
+        raise ValueError("batched drivers optimize the PEPS energy "
+                         f"(got backend={backend!r})")
+
     manager = None
     resumed_from = None
     start_k = 0
     if checkpoint_dir is not None:
         from repro.checkpoint.manager import CheckpointManager
         manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
-        latest = manager.latest_step() if resume else None
-        if latest is not None:
-            flat = manager.load(latest)
-            x0 = np.asarray(flat["x"], dtype=np.float64)
-            start_k = int(flat["k"])
-            history = [float(e) for e in flat["history"]]
-            meta = json.loads(str(flat["meta_json"][()]))
-            prior_planner_delta = meta.get("planner_delta") or {}
-            if "rng_state_json" in flat:
-                rng.bit_generator.state = json.loads(
-                    str(flat["rng_state_json"][()]))
-            resumed_from = latest
 
     def current_delta() -> dict:
         now = planner.stats_since(planner_before)
@@ -169,16 +552,6 @@ def run_vqe(
                 continue
             out[pk] = out.get(pk, 0) + pv
         return out
-
-    def objective(x):
-        if backend == "peps":
-            e = vqe_energy_peps(x, nrow, ncol, obs, update, contract)
-        else:
-            e = vqe_energy_statevector(x, nrow, ncol, obs)
-        history.append(e)
-        if callback is not None:
-            callback(len(history), e, np.asarray(x))
-        return e
 
     active_guard = runtime_guard.resolve(guard)
 
@@ -191,10 +564,79 @@ def run_vqe(
             guard=(active_guard.report if active_guard is not None else None),
             resumed_from=resumed_from)
 
+    # ---------------------------------------------------------- batched path
+    if batched:
+        cfg = OptConfig(lr=lr, b1=0.9, b2=0.95, eps=1e-8,
+                        weight_decay=0.0, grad_clip=10.0)
+        with runtime_guard.maybe(active_guard):
+            state, ehist, start_k, resumed_from = _run_batched(
+                nrow, ncol, obs, n_layers, maxiter, seed, method_l, update,
+                contract, ensemble, mesh, cfg, active_guard, manager,
+                checkpoint_every, resume, callback, current_delta,
+                prior_planner_delta)
+            # final exact energies at the final parameters, one vmapped eval
+            energy_key = jax.random.PRNGKey(DEFAULT_VQE_KEY_SEED)
+
+            def run_final(upd, con, force_dense):
+                from repro.kernels import dispatch
+
+                def e_fn(th):
+                    return vqe_energy_peps(th, nrow, ncol, obs, upd, con,
+                                           key=energy_key)
+                with runtime_guard.suspended():
+                    ctx = dispatch.forced_dense() if force_dense \
+                        else contextlib.nullcontext()
+                    with ctx:
+                        return jax.vmap(e_fn)(state["x"])
+            finals = np.asarray(
+                _escalate(run_final, active_guard, update, contract),
+                dtype=np.float64)
+        ehist_arr = (np.asarray(ehist, dtype=np.float64).reshape(
+            len(ehist), ensemble) if ehist
+            else np.zeros((0, ensemble), dtype=np.float64))
+        history.extend(float(r.min()) for r in ehist_arr)
+        history.append(float(finals.min()))
+        best = int(np.argmin(finals))
+        res = finish(np.asarray(state["x"][best]), float(finals[best]))
+        res.ensemble_thetas = np.asarray(state["x"], dtype=np.float64)
+        res.ensemble_energies = finals
+        res.ensemble_history = ehist_arr
+        return res
+
+    # ------------------------------------------------------- sequential path
+    rng = np.random.default_rng(seed)
+    x0 = rng.uniform(-0.1, 0.1, size=n_layers * n)
+    if manager is not None:
+        latest = manager.latest_step() if resume else None
+        if latest is not None:
+            flat = manager.load(latest)
+            x0 = np.asarray(flat["x"], dtype=np.float64)
+            start_k = int(flat["k"])
+            history = [float(e) for e in flat["history"]]
+            meta = json.loads(str(flat["meta_json"][()]))
+            prior_planner_delta.update(meta.get("planner_delta") or {})
+            if "rng_state_json" in flat:
+                rng.bit_generator.state = json.loads(
+                    str(flat["rng_state_json"][()]))
+            resumed_from = latest
+
+    def objective(x):
+        if backend == "peps":
+            e = vqe_energy_peps(x, nrow, ncol, obs, update, contract)
+        else:
+            e = vqe_energy_statevector(x, nrow, ncol, obs)
+        # the one host cast of the optimization loop: scipy/numpy drivers
+        # consume floats, the energy itself stays a traceable jnp scalar
+        e = float(e)
+        history.append(e)
+        if callback is not None:
+            callback(len(history), e, np.asarray(x))
+        return e
+
     with runtime_guard.maybe(active_guard):
         if is_spsa:
             x = x0.copy()
-            a0, c0 = 0.15, 0.12
+            a0, c0 = SPSA_GAINS
             for k in range(start_k, maxiter):
                 ak = a0 / (1 + k) ** 0.602
                 ck = c0 / (1 + k) ** 0.101
@@ -211,6 +653,8 @@ def run_vqe(
                         x, k + 1, history, rng, current_delta()))
             e = objective(x)
             return finish(x, e)
+
+        from scipy import optimize
 
         evals_at_save = [len(history)]
 

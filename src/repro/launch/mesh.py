@@ -53,6 +53,13 @@ def peps_mesh(n_col_shards: int, batch: int = 1):
     one column of the device grid per member.  Requires
     ``n_col_shards * batch`` available devices — on CPU, launch with e.g.
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+    The same mesh drives batched VQE: ``run_vqe(..., ensemble=k,
+    mesh=peps_mesh(cols, batch))`` shards the vmapped member axis over the
+    mesh's devices (:func:`repro.core.sharding.ensemble_sharding` splits it
+    over every axis when ``k`` is divisible by the device count), so many
+    circuits advance on many devices in one compiled program — see
+    ``docs/vqe.md``.
     """
     return make_mesh((n_col_shards, batch), ("col", "batch"))
 

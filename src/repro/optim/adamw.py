@@ -1,8 +1,12 @@
 """AdamW with decoupled weight decay and global-norm clipping.
 
-Optimizer moments are stored in float32 and sharded exactly like their
-parameters (ZeRO-style: the FSDP rules in models/common.py shard the embed
-axis over ``data``, so moments are fully distributed too).
+Optimizer moments are stored in float32 by default and sharded exactly like
+their parameters (ZeRO-style: the FSDP rules in models/common.py shard the
+embed axis over ``data``, so moments are fully distributed too).  The update
+computes in the *moment* dtype — pass ``moment_dtype=jnp.float64`` to
+:func:`adamw_init` (as the gradient-based VQE driver in
+:mod:`repro.core.vqe` does) for full-precision f64 optimization; the f32
+default is bit-identical to the original behaviour.
 """
 from __future__ import annotations
 
@@ -23,36 +27,43 @@ class OptConfig:
     grad_clip: float = 1.0
 
 
-def adamw_init(params) -> Dict[str, Any]:
+def adamw_init(params, moment_dtype=jnp.float32) -> Dict[str, Any]:
     zeros = jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        lambda p: jnp.zeros(p.shape, moment_dtype), params)
     return {"mu": zeros,
             "nu": jax.tree_util.tree_map(jnp.copy, zeros),
             "count": jnp.zeros((), jnp.int32)}
 
 
 def global_norm(tree) -> jnp.ndarray:
-    sq = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+    # promote (never truncate): f32/bf16 grads accumulate in f32 as before,
+    # f64 grads keep f64 norms
+    sq = [jnp.sum(jnp.square(x.astype(jnp.promote_types(x.dtype,
+                                                        jnp.float32))))
           for x in jax.tree_util.tree_leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(sq)))
 
 
 def adamw_update(grads, state, params, cfg: OptConfig, lr=None):
-    """Returns (new_params, new_state, metrics)."""
+    """Returns (new_params, new_state, metrics).
+
+    The update computes in each moment leaf's dtype (f32 with the default
+    :func:`adamw_init`, bit-identical to the historical hard-f32 path)."""
     lr = cfg.lr if lr is None else lr
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
     count = state["count"] + 1
-    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
-    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
 
     def upd(g, m, v, p):
-        g32 = g.astype(jnp.float32) * scale
-        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
-        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        dt = m.dtype
+        c1 = 1.0 - cfg.b1 ** count.astype(dt)
+        c2 = 1.0 - cfg.b2 ** count.astype(dt)
+        gd = g.astype(dt) * scale.astype(dt)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gd
+        v_new = cfg.b2 * v + (1 - cfg.b2) * gd * gd
         step = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
-        p32 = p.astype(jnp.float32)
-        p_new = p32 - lr * (step + cfg.weight_decay * p32)
+        pd = p.astype(dt)
+        p_new = pd - lr * (step + cfg.weight_decay * pd)
         return p_new.astype(p.dtype), m_new, v_new
 
     flat_p, treedef = jax.tree_util.tree_flatten(params)

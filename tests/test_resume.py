@@ -171,6 +171,47 @@ class TestVQEResume:
         assert np.max(np.abs(ref.thetas - res.thetas)) <= TOL
         assert abs(ref.energy - res.energy) <= TOL
 
+    def test_batched_adam_resume_bit_identical(self, tmp_path):
+        """Batched (vmapped-ensemble) runs resume bit-identically WITHOUT
+        an RNG snapshot: every PRNG stream is keyed on (seed, iteration,
+        member), so parameters + adam moments + the iteration index replay
+        the remaining trajectory exactly."""
+        kw = dict(n_layers=1, max_bond=2, seed=0, method="adam", ensemble=3,
+                  lr=0.1)
+        ref = run_vqe(2, 2, OBS, maxiter=6, **kw)
+        run_vqe(2, 2, OBS, maxiter=3, **kw,
+                checkpoint_dir=str(tmp_path), checkpoint_every=3)
+        res = run_vqe(2, 2, OBS, maxiter=6, **kw,
+                      checkpoint_dir=str(tmp_path), checkpoint_every=3)
+        assert res.resumed_from == 3
+        assert np.max(np.abs(ref.ensemble_thetas
+                             - res.ensemble_thetas)) <= TOL
+        assert np.max(np.abs(ref.ensemble_history
+                             - res.ensemble_history)) <= TOL
+        assert abs(ref.energy - res.energy) <= TOL
+
+    def test_batched_spsa_resume_bit_identical(self, tmp_path):
+        kw = dict(n_layers=1, max_bond=2, seed=2, method="spsa", ensemble=2)
+        ref = run_vqe(2, 2, OBS, maxiter=6, **kw)
+        run_vqe(2, 2, OBS, maxiter=4, **kw,
+                checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        res = run_vqe(2, 2, OBS, maxiter=6, **kw,
+                      checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        assert res.resumed_from == 4
+        assert np.max(np.abs(ref.ensemble_thetas
+                             - res.ensemble_thetas)) <= TOL
+
+    def test_batched_resume_rejects_sequential_checkpoint(self, tmp_path):
+        """A batched run pointed at a sequential snapshot fails loudly
+        instead of resuming from an incompatible state."""
+        run_vqe(2, 2, OBS, n_layers=1, max_bond=2, maxiter=3, seed=3,
+                method="spsa", checkpoint_dir=str(tmp_path),
+                checkpoint_every=1)
+        with pytest.raises(ValueError, match="not from a batched"):
+            run_vqe(2, 2, OBS, n_layers=1, max_bond=2, maxiter=3, seed=3,
+                    method="adam", ensemble=2,
+                    checkpoint_dir=str(tmp_path), checkpoint_every=1)
+
     def test_slsqp_warm_restart(self, tmp_path):
         """SLSQP state lives inside scipy: the documented contract is a
         warm restart from the checkpointed x, not a bit-identical replay."""

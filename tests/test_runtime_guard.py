@@ -235,6 +235,77 @@ class TestFidelityFloor:
 
 
 # ---------------------------------------------------------------------------
+# Gradient-mode guarding (ISSUE 10): evaluation-granularity escalation
+# ---------------------------------------------------------------------------
+
+class TestGradModeGuard:
+    """The per-solve guard host-syncs and cannot run under tracing, so the
+    gradient path guards whole evaluations: a fault inside a grad-mode
+    energy evaluation escalates through the ladder instead of surfacing as
+    a NaN gradient (docs/vqe.md)."""
+
+    def _grad(self, guard=None, svd=None):
+        from repro.core.peps import QRUpdate
+        from repro.core.vqe import vqe_energy_and_grad
+        obs = tfi_hamiltonian(2, 2)
+        upd = QRUpdate(rank=2) if svd is None else QRUpdate(rank=2, svd=svd)
+        con = BMPS(8) if svd is None else BMPS(8, svd=svd)
+        th = np.random.default_rng(1).uniform(-0.3, 0.3, 4)
+        return vqe_energy_and_grad(th, 2, 2, obs, upd, con, guard=guard)
+
+    def test_guarded_grad_recovers_finite(self):
+        g = runtime_guard.RuntimeGuard()
+        with faults.armed("einsumsvd.result", nth=1, action="nan", times=1):
+            e, grad = self._grad(guard=g)
+        assert np.isfinite(float(e))
+        assert np.all(np.isfinite(np.asarray(grad)))
+        assert g.report.counters.get("guard_nan_events", 0) == 1
+        assert g.report.counters.get("guard_recovered", 0) == 1
+        assert g.report.events[0].site == "vqe_grad"
+        assert any(ev.action.startswith("recovered:")
+                   for ev in g.report.events)
+
+    def test_unguarded_grad_propagates_nan(self):
+        with faults.armed("einsumsvd.result", nth=1, action="nan", times=1):
+            e, grad = self._grad()
+        assert not np.all(np.isfinite(np.asarray(grad)))
+
+    def test_randomized_svd_takes_exact_svd_rung_first(self):
+        g = runtime_guard.RuntimeGuard()
+        svd = RandomizedSVD(niter=2, oversample=4)
+        with faults.armed("einsumsvd.result", nth=1, action="nan", times=1):
+            e, grad = self._grad(guard=g, svd=svd)
+        assert np.all(np.isfinite(np.asarray(grad)))
+        assert g.report.counters.get("guard_rung_exact_svd", 0) == 1
+
+    def test_guarded_grad_exhaustion_is_structured(self):
+        """A persistent fault (times larger than any rung count) exhausts
+        the ladder as GuardExhaustedError — never a NaN result."""
+        g = runtime_guard.RuntimeGuard()
+        with faults.armed("einsumsvd.result", nth=1, action="nan",
+                          times=10**6):
+            with pytest.raises(runtime_guard.GuardExhaustedError) as ei:
+                self._grad(guard=g)
+        assert ei.value.site == "vqe_grad"
+        assert g.report.counters.get("guard_exhausted", 0) == 1
+
+    def test_guarded_batched_run_recovers(self):
+        """The vmapped ensemble driver escalates at evaluation granularity
+        too — fault-injected members never poison a compiled cache, and
+        the run's report records the recovery."""
+        from repro.core.vqe import run_vqe
+        obs = tfi_hamiltonian(2, 2)
+        with faults.armed("einsumsvd.result", nth=1, action="nan", times=1):
+            r = run_vqe(2, 2, obs, n_layers=1, max_bond=2, maxiter=2,
+                        seed=0, method="adam", ensemble=2, lr=0.1,
+                        guard=True)
+        assert np.isfinite(r.energy)
+        assert np.all(np.isfinite(r.ensemble_history))
+        assert r.guard is not None
+        assert r.guard.counters.get("guard_recovered", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
 # Persistent planner path cache
 # ---------------------------------------------------------------------------
 
